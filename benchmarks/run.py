@@ -1,0 +1,22 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import sys
+
+
+def main() -> None:
+    from benchmarks.paper_benches import ALL
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in ALL:
+        try:
+            for name, us, derived in bench():
+                print(f"{name},{us:.1f},{derived}")
+                sys.stdout.flush()
+        except Exception as e:  # keep the harness going; report the failure
+            failures += 1
+            print(f"{bench.__name__}_ERROR,0.0,{type(e).__name__}:{e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

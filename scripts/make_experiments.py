@@ -1,0 +1,81 @@
+"""Generate EXPERIMENTS.md sections from artifacts/dryrun JSONs."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ART = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "artifacts", "dryrun")
+
+
+def load(mesh: str, mode: str, tag: str = "") -> dict[str, dict]:
+    out = {}
+    for fn in sorted(os.listdir(ART)):
+        if fn.endswith(f"__{mesh}__{mode}{tag}.json"):
+            rec = json.load(open(os.path.join(ART, fn)))
+            if "arch" not in rec:           # skip records carry only the cell name
+                parts = rec.get("cell", fn).split("__")
+                rec["arch"], rec["shape"] = parts[0], parts[1]
+            out[f"{rec['arch']}|{rec['shape']}"] = rec
+    return out
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/1e9:.2f}G"
+
+
+def dryrun_table(mesh: str, mode: str = "baseline") -> str:
+    rows = [f"| arch | shape | status | FLOPs (global) | HBM bytes | coll intra | "
+            f"coll cross | mem/dev (arg+tmp) | compile s |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for key, r in load(mesh, mode).items():
+        arch, shape = key.split("|")
+        if r.get("status") == "skipped":
+            rows.append(f"| {arch} | {shape} | skip | - | - | - | - | - | - |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {arch} | {shape} | ERROR | - | - | - | - | - | - |")
+            continue
+        t = r["terms"]
+        m = r["memory"]
+        mem = (m["argument_bytes_per_device"] or 0) + \
+            (m["temp_bytes_per_device"] or 0)
+        rows.append(
+            f"| {arch} | {shape} | ok | {t['flops']:.2e} | "
+            f"{t['hbm_bytes']:.2e} | {t['coll_bytes_intra']:.2e} | "
+            f"{t['coll_bytes_cross']:.2e} | {mem/1e9:.1f}G | "
+            f"{r['compile_s']:.0f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(mode: str = "baseline") -> str:
+    rows = ["| arch | shape | t_comp ms | t_mem ms | t_coll ms | dominant | "
+            "MODEL_FLOPS | useful ratio | roofline frac | AD | ADN | note |",
+            "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for key, r in load("16x16", mode).items():
+        arch, shape = key.split("|")
+        if r.get("status") != "ok":
+            continue
+        t = r["terms"]
+        rows.append(
+            f"| {arch} | {shape} | {t['t_compute_s']*1e3:.1f} | "
+            f"{t['t_memory_s']*1e3:.1f} | {t['t_collective_s']*1e3:.1f} | "
+            f"**{t['dominant']}** | {t['model_flops']:.2e} | "
+            f"{t['useful_flop_ratio']:.2f} | {t['roofline_fraction']*100:.1f}% | "
+            f"{t['AD']:.1f} | {t['ADN']:.1f} | {r['suggestion'][:60]} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    section = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if section in ("dryrun", "all"):
+        print("### Single-pod (16x16 = 256 chips)\n")
+        print(dryrun_table("16x16"))
+        print("\n### Multi-pod (2x16x16 = 512 chips)\n")
+        print(dryrun_table("2x16x16"))
+    if section in ("roofline", "all"):
+        print("\n### Roofline (single-pod, baseline)\n")
+        print(roofline_table())

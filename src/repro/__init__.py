@@ -1,0 +1,4 @@
+"""repro: balance-aware JAX/TPU training+serving framework reproducing
+"Hadoop in Low-Power Processors" (Zheng, Szalay, Terzis; 2014) — see DESIGN.md."""
+
+__version__ = "0.1.0"

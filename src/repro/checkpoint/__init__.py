@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpointing import Checkpointer
+from repro.checkpoint.integrity import chunk_checksums, verify, DEFAULT_CHUNK

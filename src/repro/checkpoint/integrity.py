@@ -1,0 +1,34 @@
+"""Chunked checksums — the paper's `io.bytes.per.checksum` analogue.
+
+Hadoop CRC32s every 512 bytes by default; the paper found per-call overhead dominated
+and raising the chunk to 4096 recovered the cost. We checksum checkpoint shards in
+configurable chunks (default 1 MiB) with zlib.crc32; restore verifies and reports the
+first corrupt chunk (so a partial re-fetch from a replica is possible, not a full
+re-download).
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+DEFAULT_CHUNK = 1 << 20
+
+
+def chunk_checksums(buf: bytes | np.ndarray, chunk: int = DEFAULT_CHUNK) -> list[int]:
+    if isinstance(buf, np.ndarray):
+        buf = np.ascontiguousarray(buf).tobytes()
+    return [zlib.crc32(buf[i:i + chunk]) & 0xFFFFFFFF
+            for i in range(0, max(len(buf), 1), chunk)]
+
+
+def verify(buf: bytes | np.ndarray, sums: list[int],
+           chunk: int = DEFAULT_CHUNK) -> int:
+    """-> -1 if intact, else index of first corrupt chunk."""
+    got = chunk_checksums(buf, chunk)
+    if len(got) != len(sums):
+        return 0
+    for i, (a, b) in enumerate(zip(got, sums)):
+        if a != b:
+            return i
+    return -1

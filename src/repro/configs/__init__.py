@@ -1,0 +1,11 @@
+from repro.configs.base import (
+    ArchConfig, MoEConfig, SSMConfig, RGLRUConfig, MLAConfig,
+    RunConfig, ShapeConfig, SHAPES, cell_is_applicable, round_up,
+)
+from repro.configs.registry import ARCHS, get_arch, get_shape, live_cells
+
+__all__ = [
+    "ArchConfig", "MoEConfig", "SSMConfig", "RGLRUConfig", "MLAConfig",
+    "RunConfig", "ShapeConfig", "SHAPES", "cell_is_applicable", "round_up",
+    "ARCHS", "get_arch", "get_shape", "live_cells",
+]

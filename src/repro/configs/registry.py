@@ -1,0 +1,46 @@
+"""Registry of assigned architectures (``--arch <id>``)."""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeConfig, cell_is_applicable
+
+from repro.configs.mamba2_1_3b import CONFIG as _mamba2
+from repro.configs.tinyllama_1_1b import CONFIG as _tinyllama
+from repro.configs.olmo_1b import CONFIG as _olmo
+from repro.configs.gemma2_2b import CONFIG as _gemma2
+from repro.configs.starcoder2_7b import CONFIG as _starcoder2
+from repro.configs.musicgen_medium import CONFIG as _musicgen
+from repro.configs.recurrentgemma_2b import CONFIG as _recurrentgemma
+from repro.configs.deepseek_v3_671b import CONFIG as _deepseek
+from repro.configs.granite_moe_3b_a800m import CONFIG as _granite
+from repro.configs.internvl2_2b import CONFIG as _internvl2
+
+ARCHS: dict[str, ArchConfig] = {
+    c.name: c
+    for c in [
+        _mamba2, _tinyllama, _olmo, _gemma2, _starcoder2,
+        _musicgen, _recurrentgemma, _deepseek, _granite, _internvl2,
+    ]
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; known: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def live_cells() -> list[tuple[ArchConfig, ShapeConfig]]:
+    """All applicable (arch, shape) dry-run cells."""
+    out = []
+    for cfg in ARCHS.values():
+        for shape in SHAPES.values():
+            ok, _ = cell_is_applicable(cfg, shape)
+            if ok:
+                out.append((cfg, shape))
+    return out

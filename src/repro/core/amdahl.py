@@ -1,0 +1,133 @@
+"""Amdahl-number / roofline analysis (the paper's Table 4, recast for TPU v5e).
+
+The paper measures, per Hadoop task, instruction rate vs disk and network I/O and
+derives "Amdahl numbers" (bits of I/O per instruction) — concluding the CPU is the
+bottleneck and a balanced node needs 4 cores. We derive the same three-resource balance
+for every (arch x shape x mesh) from the compiled dry-run artifact:
+
+    compute term    = HLO_FLOPs   / (chips * 197e12 FLOP/s bf16)
+    memory term     = HLO_bytes   / (chips * 819e9  B/s HBM)
+    collective term = coll_bytes  / (chips * n_links * 50e9 B/s ICI)  (per class)
+
+and report the dominant term, the useful-FLOP ratio MODEL_FLOPS / HLO_FLOPS, and the
+"chips to balance" figure (the paper's four-core estimate: how much compute per chip
+the observed I/O pattern could actually feed).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# TPU v5e-class hardware constants (per assignment)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+ICI_LINKS_PER_CHIP = 4       # 2D torus (single-pod mesh)
+CROSS_POD_BW = 25e9          # effective per-chip cross-pod bandwidth (DCI-limited)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float
+    hbm_bytes: float
+    coll_bytes_intra: float
+    coll_bytes_cross: float
+    chips: int
+    model_flops: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        t_intra = self.coll_bytes_intra / (self.chips * ICI_BW * ICI_LINKS_PER_CHIP)
+        t_cross = self.coll_bytes_cross / (self.chips * CROSS_POD_BW)
+        return t_intra + t_cross
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """No-overlap bound: max of the three terms (perfect overlap ideal)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved at the ideal-overlap bound:
+        MODEL_FLOPS / (chips * peak * step_time)."""
+        if not self.model_flops or not self.step_time:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * self.step_time)
+
+    @property
+    def mfu_bound(self) -> float:
+        return self.roofline_fraction
+
+    def amdahl_numbers(self) -> dict:
+        """The paper's AD / ADN analogues: bytes of I/O per FLOP vs machine balance.
+
+        machine balance (HBM): 819/197e3 = 4.16 mB/FLOP; a workload whose
+        bytes-per-flop exceeds the machine's is I/O(memory)-bound, exactly the
+        paper's 'Amdahl number > 1' test.
+        """
+        bpf_mem = self.hbm_bytes / self.flops if self.flops else 0.0
+        bpf_net = ((self.coll_bytes_intra + self.coll_bytes_cross) / self.flops
+                   if self.flops else 0.0)
+        machine_mem = HBM_BW / PEAK_FLOPS
+        machine_net = ICI_BW * ICI_LINKS_PER_CHIP / PEAK_FLOPS
+        return {
+            "AD": bpf_mem / machine_mem if machine_mem else 0.0,     # >1 => mem-bound
+            "ADN": ((bpf_mem / machine_mem) + (bpf_net / machine_net)
+                    if machine_mem else 0.0),
+            "bytes_per_flop_mem": bpf_mem,
+            "bytes_per_flop_net": bpf_net,
+        }
+
+    def chips_to_balance(self) -> float:
+        """Chips needed so compute time matches the I/O time at this workload shape
+        (the paper's 'four Atom cores' estimate, inverted for chips)."""
+        t_io = max(self.t_memory, self.t_collective)
+        if t_io <= 0:
+            return float(self.chips)
+        return self.chips * self.t_compute / t_io
+
+    def to_dict(self) -> dict:
+        d = {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes_intra": self.coll_bytes_intra,
+            "coll_bytes_cross": self.coll_bytes_cross,
+            "chips": self.chips, "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "dominant": self.dominant,
+            "step_time_s": self.step_time,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+        d.update(self.amdahl_numbers())
+        d["chips_to_balance"] = self.chips_to_balance()
+        return d
+
+
+def model_flops_train(n_params_active: int, tokens: int) -> float:
+    """6 N D for a training step (fwd+bwd)."""
+    return 6.0 * n_params_active * tokens
+
+
+def model_flops_prefill(n_params_active: int, tokens: int) -> float:
+    return 2.0 * n_params_active * tokens
+
+
+def model_flops_decode(n_params_active: int, tokens: int) -> float:
+    return 2.0 * n_params_active * tokens

@@ -1,0 +1,57 @@
+"""Hierarchical, optionally compressed gradient synchronization.
+
+The paper's transport insight: local (same-node, shared-memory) bytes are cheap; remote
+(TCP) bytes are expensive and can only be *reduced*, not accelerated. On a multi-pod
+TPU mesh the same split exists between intra-pod ICI and the cross-pod links. The
+hierarchical schedule below moves 1/|data| of the bytes across pods:
+
+    flat:          all-reduce over (pod, data)           cross-pod bytes ~ n
+    hierarchical:  reduce-scatter over data (intra-pod)
+                   -> all-reduce over pod on n/|data|    cross-pod bytes ~ n/16
+                   -> all-gather over data (intra-pod)
+
+``codec="int8"`` additionally quantizes the cross-pod phase (the LZO analogue applied
+exactly where the paper applied it: on the wire that cannot be made faster).
+
+These functions are shard_map *bodies*: they assume manual axes. ``sync_pytree`` wraps
+them over a gradient pytree by flattening to one fp32 vector per dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import compressed_psum_1d
+
+
+def flat_psum(x, axes: tuple[str, ...]):
+    return jax.lax.psum(x, axes)
+
+
+def hierarchical_psum_1d(x, inner_axis: str | None, outer_axis: str | None,
+                         codec: str = "none"):
+    """x: [n] on each device. Returns the (pod,data)-all-reduced vector.
+
+    inner_axis: fast intra-pod axis (reduce-scatter + all-gather)
+    outer_axis: slow cross-pod axis (psum on the scattered shard)
+    """
+    n = x.shape[0]
+    if inner_axis is None:
+        if outer_axis is None:
+            return x
+        return (compressed_psum_1d(x, outer_axis) if codec == "int8"
+                else jax.lax.psum(x, outer_axis))
+    R = jax.lax.axis_size(inner_axis)
+    pad = (-n) % R
+    xp = jnp.pad(x, (0, pad))
+    shard = jax.lax.psum_scatter(xp.reshape(R, -1), inner_axis,
+                                 scatter_dimension=0, tiled=False)
+    if outer_axis is not None:
+        if codec == "int8":
+            shard = compressed_psum_1d(shard, outer_axis)
+        else:
+            shard = jax.lax.psum(shard, outer_axis)
+    full = jax.lax.all_gather(shard, inner_axis, axis=0)
+    return full.reshape(-1)[:n]

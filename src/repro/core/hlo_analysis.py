@@ -1,0 +1,387 @@
+"""HLO-level analysis: loop-aware FLOPs, HBM-traffic and collective-bytes census.
+
+XLA's ``compiled.cost_analysis()`` visits a ``while`` body once, so any scanned model
+(layers under ``lax.scan``) is undercounted by the trip count. We therefore parse the
+post-SPMD optimized HLO text ourselves:
+
+- split into computations, build the call graph (while/call/fusion/conditional edges),
+- infer each while's trip count from the comparison constant in its condition,
+- multiply dot-FLOPs, fusion I/O bytes and collective payloads through the graph.
+
+All quantities are **per device** (the HLO is the SPMD-partitioned single-program
+module); multiply by device count for global totals. Collective *wire bytes per chip*
+use ring-algorithm factors:
+
+    all-reduce        2 * S * (R-1)/R        (S = operand bytes)
+    all-gather        O * (R-1)/R            (O = output bytes)
+    reduce-scatter    I * (R-1)/R            (I = operand bytes)
+    all-to-all        S * (R-1)/R
+    collective-permute  S
+
+Each collective is classified cross-pod if its replica group spans pods.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\w*)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+# result signature matched lazily: tuples may contain /*index=N*/ comments; the op
+# name is the first bare identifier followed by '(' after the '='.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([a-z][\w\-]*)\((.*)$")
+_REF_RE = re.compile(r"(?:condition|body|to_apply|calls)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{(.*?)\}[,)\s]")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(sig):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _dot_flops(result_sig: str, operands: str) -> float:
+    """FLOPs of a dot from result shape x contraction size (2*M*N*K).
+
+    K is inferred from the lhs operand shape and the contracting dims annotation.
+    Fallback: product(result dims) * 2 * K_guess from operand shapes.
+    """
+    res = _SHAPE_RE.search(result_sig)
+    if not res:
+        return 0.0
+    out_elems = 1
+    if res.group(2):
+        for d in res.group(2).split(","):
+            if d:
+                out_elems *= int(d)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]+)\}", operands)
+    shapes = _SHAPE_RE.findall(operands)
+    if not shapes:
+        return 0.0
+    lhs_dims = [int(d) for d in shapes[0][1].split(",") if d] if shapes[0][1] else []
+    k = 1
+    if m and lhs_dims:
+        for ci in m.group(1).split(","):
+            ci = int(ci)
+            if ci < len(lhs_dims):
+                k *= lhs_dims[ci]
+    return 2.0 * out_elems * k
+
+
+@dataclasses.dataclass
+class Collective:
+    op: str
+    wire_bytes: float            # per chip, algo-factored, loop-multiplied
+    payload_bytes: float
+    group_size: int
+    cross_pod: bool
+    mult: float
+    line: str
+
+
+@dataclasses.dataclass
+class HLOAnalysis:
+    flops: float                 # per device, loop-multiplied (dots only)
+    hbm_bytes: float             # per device, fusion/dot/collective I/O
+    collectives: list
+    coll_wire_intra: float
+    coll_wire_cross: float
+    coll_count: int
+    op_count: int
+    while_trips: dict
+
+    def summary(self) -> dict:
+        by_op: dict[str, float] = defaultdict(float)
+        for c in self.collectives:
+            by_op[c.op] += c.wire_bytes
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "coll_wire_intra_per_device": self.coll_wire_intra,
+            "coll_wire_cross_per_device": self.coll_wire_cross,
+            "coll_count": self.coll_count,
+            "op_count": self.op_count,
+            "coll_by_op": dict(by_op),
+        }
+
+
+def _parse_groups(line: str, pod_size: int) -> tuple[int, bool]:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        first = m.group(1).split("}", 1)[0].lstrip("{")
+        ids = [int(t) for t in first.split(",") if t.strip().lstrip("-").isdigit()]
+        if not ids:
+            return 1, False
+        cross = len({i // pod_size for i in ids}) > 1 if pod_size else False
+        return len(ids), cross
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        ngroups, gsize = int(m.group(1)), int(m.group(2))
+        reshape = [int(x) for x in m.group(3).split(",")]
+        transpose = ([int(x) for x in m.group(4).split(",")]
+                     if m.group(4) else list(range(len(reshape))))
+        n = int(np.prod(reshape))
+        ids = np.arange(n).reshape(reshape).transpose(transpose).reshape(-1)
+        first = ids[:gsize]
+        cross = (len({int(i) // pod_size for i in first}) > 1
+                 if pod_size else False)
+        return gsize, cross
+    return 1, False
+
+
+# Ops that do not contribute to the HBM-traffic model. Beyond structural no-ops,
+# bare elementwise ops are excluded: the CPU backend leaves many unfused that the TPU
+# backend would fuse into neighbors, so counting them would systematically overstate
+# TPU HBM traffic. What remains: dot/fusion/reduce/scatter/gather/slice-family/
+# concatenate/sort/copy-like data movement + collectives.
+_ELEMENTWISE = {
+    "add", "multiply", "subtract", "divide", "maximum", "minimum", "select",
+    "compare", "convert", "exponential", "exponential-minus-one", "tanh",
+    "negate", "rsqrt", "sqrt", "log", "log-plus-one", "power", "and", "or",
+    "not", "xor", "clamp", "abs", "sign", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "logistic", "sine", "cosine",
+    "atan2", "rem", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "is-finite", "popcnt", "clz",
+}
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "while", "call", "conditional", "after-all", "custom-call",
+             "copy-start", "copy-done", "partition-id", "replica-id",
+             "iota", "broadcast", "reshape", "transpose"} | _ELEMENTWISE
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        ls = line.rstrip()
+        if cur is None:
+            if ls.endswith("{") and ") -> " in ls:
+                tok = ls.split()
+                name = tok[1] if tok[0] == "ENTRY" else tok[0]
+                cur = name.lstrip("%").split("(")[0]
+                comps[cur] = []
+            continue
+        if ls.strip() == "}":
+            cur = None
+            continue
+        comps[cur].append(line)
+    return comps
+
+
+def _entry_name(hlo_text: str) -> str | None:
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                return m.group(1)
+    return None
+
+
+def _while_trip(cond_lines: list[str]) -> int:
+    """Trip count heuristic: max integer constant in the condition computation."""
+    best = 1
+    for l in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", l):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def analyze_hlo(hlo_text: str, *, pod_size: int = 0) -> HLOAnalysis:
+    comps = _split_computations(hlo_text)
+    entry = _entry_name(hlo_text)
+    if entry is None and comps:
+        entry = next(iter(comps))
+
+    # per-computation raw stats + edges
+    stats: dict[str, dict] = {}
+    edges: dict[str, list[tuple[str, float]]] = defaultdict(list)
+    _OPERAND_RE = re.compile(r"%([\w.\-]+)")
+    for name, lines in comps.items():
+        flops = 0.0
+        bytes_ = 0.0
+        colls: list[tuple[str, float, int, int, bool, str]] = []
+        nops = 0
+        # pass 1: symbol table instr name -> (result sig, elem sig of first shape)
+        sym: dict[str, str] = {}
+        parsed = []
+        for line in lines:
+            mi = _INSTR_RE.match(line)
+            if not mi:
+                continue
+            iname, rsig, op, rest = mi.groups()
+            sym[iname] = rsig
+            parsed.append((iname, rsig, op, rest, line))
+
+        def operand_sigs(rest: str) -> list[str]:
+            head = rest.split("), ")[0]
+            return [sym.get(n, "") for n in _OPERAND_RE.findall(head)]
+
+        # pass 2
+        for iname, rsig, op, rest, line in parsed:
+            nops += 1
+            if op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", line)
+                mc = re.search(r"condition=%?([\w.\-]+)", line)
+                trip = _while_trip(comps.get(mc.group(1), [])) if mc else 1
+                if mb:
+                    edges[name].append((mb.group(1), float(max(trip, 1)), True))
+                if mc:
+                    edges[name].append((mc.group(1), float(max(trip, 1)), True))
+                continue
+            mbr = _BRANCH_RE.search(line)
+            if mbr:
+                for b in mbr.group(1).split(","):
+                    edges[name].append((b.strip().lstrip("%"), 1.0, True))
+            if op == "fusion":
+                # fusion internals: count FLOPs (dots) but not HBM bytes
+                for r in _REF_RE.finditer(line):
+                    edges[name].append((r.group(1), 1.0, False))
+            else:
+                for r in _REF_RE.finditer(line):
+                    edges[name].append((r.group(1), 1.0, True))
+            opnds = operand_sigs(rest)
+            in_bytes = sum(_shape_bytes(s) for s in opnds)
+            out_bytes = _shape_bytes(rsig)
+            if op == "dot":
+                flops += _dot_flops(rsig, " ".join(opnds) + " " + rest)
+                bytes_ += in_bytes + out_bytes
+            elif op in COLLECTIVE_OPS or any(op == c + "-start"
+                                             for c in COLLECTIVE_OPS):
+                base = op.replace("-start", "")
+                payload_in = in_bytes
+                payload_out = out_bytes
+                gsize, cross = _parse_groups(line, pod_size)
+                R = max(gsize, 1)
+                factor = (R - 1) / R
+                if base == "all-reduce":
+                    wire = 2.0 * payload_in * factor
+                elif base == "all-gather":
+                    wire = payload_out * factor
+                elif base == "reduce-scatter":
+                    wire = payload_in * factor
+                elif base == "all-to-all":
+                    wire = payload_in * factor
+                else:                      # collective-permute
+                    wire = payload_in
+                colls.append((base, wire, max(payload_in, payload_out), R, cross,
+                              line.strip()[:160]))
+                bytes_ += payload_in + payload_out
+            elif op in ("dynamic-update-slice",):
+                # in-place update: only the slice is read+written. The update is
+                # the second-largest operand (largest = aliased buffer; the rest
+                # are scalar indices) — robust to fusion-parameter orderings.
+                ob = sorted((_shape_bytes(s) for s in opnds), reverse=True)
+                upd = ob[1] if len(ob) > 1 else (ob[0] if ob else 0)
+                bytes_ += 2 * upd
+            elif op in ("dynamic-slice", "gather", "slice"):
+                # only the extracted slice moves
+                bytes_ += 2 * out_bytes
+            elif op == "copy":
+                # loop-carry copies are elided by buffer aliasing on TPU
+                pass
+            elif op == "fusion" and "dynamic-update-slice" in iname:
+                # fusion ending in an in-place DUS: the big aliased buffer is
+                # untouched except for the written slice ~= other operands
+                ops_b = [_shape_bytes(s) for s in opnds]
+                big = max(ops_b) if ops_b else 0
+                bytes_ += 2 * max(sum(ops_b) - big, 0)
+            elif op == "fusion" or op not in _SKIP_OPS:
+                # HBM traffic model: operands + result cross HBM per fusion/op
+                bytes_ += in_bytes + out_bytes
+        stats[name] = {"flops": flops, "bytes": bytes_, "colls": colls,
+                       "nops": nops}
+
+    # propagate multipliers from entry: (flops multiplier, bytes multiplier)
+    multf: dict[str, float] = defaultdict(float)
+    multb: dict[str, float] = defaultdict(float)
+
+    def visit(name: str, mf: float, mb: float, depth=0):
+        if name not in comps or depth > 64:
+            return
+        multf[name] += mf
+        multb[name] += mb
+        for child, k, count_bytes in edges.get(name, []):
+            visit(child, mf * k, mb * k if count_bytes else 0.0, depth + 1)
+
+    if entry:
+        visit(entry, 1.0, 1.0)
+
+    total_flops = 0.0
+    total_bytes = 0.0
+    coll_list: list[Collective] = []
+    wire_intra = wire_cross = 0.0
+    ncoll = 0
+    nops = 0
+    trips = {}
+    for name, st in stats.items():
+        mf = multf.get(name, 0.0)
+        mb = multb.get(name, 0.0)
+        if mf <= 0 and mb <= 0:
+            continue
+        total_flops += st["flops"] * mf
+        total_bytes += st["bytes"] * mb
+        nops += int(st["nops"] * mb)
+        for (op, wire, payload, R, cross, line) in st["colls"]:
+            m = mb
+            if m <= 0:
+                continue
+            coll_list.append(Collective(op, wire * m, payload, R, cross, m, line))
+            ncoll += int(m)
+            if cross:
+                wire_cross += wire * m
+            else:
+                wire_intra += wire * m
+    return HLOAnalysis(total_flops, total_bytes, coll_list, wire_intra,
+                       wire_cross, ncoll, nops, trips)
+
+
+# Back-compat helpers -------------------------------------------------------
+
+def parse_collectives(hlo_text: str, *, pod_size: int = 0):
+    return analyze_hlo(hlo_text, pod_size=pod_size).collectives
+
+
+def collective_summary(hlo_text: str, *, pod_size: int = 0) -> dict:
+    a = analyze_hlo(hlo_text, pod_size=pod_size)
+    s = a.summary()
+    return {
+        "count": a.coll_count,
+        "bytes_total": a.coll_wire_intra + a.coll_wire_cross,
+        "bytes_intra_pod": a.coll_wire_intra,
+        "bytes_cross_pod": a.coll_wire_cross,
+        "by_op": s["coll_by_op"],
+    }
+
+
+def op_census(hlo_text: str) -> dict[str, int]:
+    census: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m:
+            census[m.group(3)] += 1
+    return dict(census)

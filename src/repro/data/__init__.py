@@ -1,0 +1,4 @@
+from repro.data.pipeline import (
+    Pipeline, PipelineConfig, SyntheticTokens, MemmapTokens,
+)
+from repro.data import sky

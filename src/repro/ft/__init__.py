@@ -1,0 +1,2 @@
+from repro.ft.stragglers import StragglerMonitor, StragglerConfig
+from repro.ft.coordinator import Coordinator, CoordinatorConfig, State

@@ -1,0 +1,77 @@
+"""Straggler detection + mitigation policy.
+
+At thousand-node scale some hosts run slow (thermal, faulty HBM, noisy neighbors).
+The monitor tracks per-host step-time EMAs; hosts slower than ``k x median`` are
+flagged. Mitigation ladder (in order):
+
+1. rebalance: shift microbatch quota away from the straggler (keeps the mesh),
+2. exclude: drop the host and trigger an elastic remesh via checkpoint restore.
+
+Pure policy logic — deterministic and unit-testable with synthetic timings; the
+launcher wires it to real step times.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerConfig:
+    ema: float = 0.8
+    threshold: float = 1.5          # k x median -> straggler
+    patience: int = 3               # consecutive flags before action
+    rebalance_cap: float = 0.5      # max fraction of quota that can be shifted
+    exclude_after: int = 10         # flags before recommending exclusion
+
+
+class StragglerMonitor:
+    def __init__(self, hosts: list[int], cfg: StragglerConfig | None = None):
+        self.cfg = cfg or StragglerConfig()
+        self.hosts = list(hosts)
+        self.ema: dict[int, float] = {}
+        self.flags: dict[int, int] = defaultdict(int)
+        self.quota: dict[int, float] = {h: 1.0 for h in hosts}
+
+    def record(self, host: int, step_time: float):
+        prev = self.ema.get(host)
+        a = self.cfg.ema
+        self.ema[host] = step_time if prev is None else a * prev + (1 - a) * step_time
+
+    def stragglers(self) -> list[int]:
+        if len(self.ema) < 2:
+            return []
+        med = float(np.median(list(self.ema.values())))
+        out = []
+        for h, t in self.ema.items():
+            if t > self.cfg.threshold * med:
+                self.flags[h] += 1
+                if self.flags[h] >= self.cfg.patience:
+                    out.append(h)
+            else:
+                self.flags[h] = 0
+        return out
+
+    def propose(self) -> dict:
+        """-> {"action": "none"|"rebalance"|"exclude", ...}."""
+        s = self.stragglers()
+        if not s:
+            return {"action": "none"}
+        med = float(np.median(list(self.ema.values())))
+        worst = max(s, key=lambda h: self.ema[h])
+        if self.flags[worst] >= self.cfg.exclude_after:
+            return {"action": "exclude", "host": worst,
+                    "surviving": [h for h in self.hosts if h != worst]}
+        # shift quota proportionally to the slowdown, capped
+        slow = self.ema[worst] / med
+        shift = min(1.0 - 1.0 / slow, self.cfg.rebalance_cap)
+        new_quota = dict(self.quota)
+        taken = new_quota[worst] * shift
+        new_quota[worst] -= taken
+        others = [h for h in self.hosts if h != worst]
+        for h in others:
+            new_quota[h] += taken / len(others)
+        self.quota = new_quota
+        return {"action": "rebalance", "host": worst, "quota": new_quota}

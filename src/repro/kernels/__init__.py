@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the perf-critical hot spots the paper's workloads expose:
+#   quantize/         block int8 quantize/dequant (compressed collectives' hot path)
+#   zones_pairs/      blockwise pair search (the astronomy apps' reducer hot spot)
+#   flash_attention/  causal GQA flash fwd (removes score-matrix HBM traffic)
+# Each has kernel.py (pl.pallas_call + BlockSpec VMEM tiling), ops.py (jit'd
+# wrapper with backend dispatch), ref.py (pure-jnp oracle for allclose sweeps).

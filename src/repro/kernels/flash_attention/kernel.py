@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: causal GQA flash attention (forward).
+
+Canonical Mosaic pattern: grid (B, H, nq, nk) with the KV index innermost; VMEM
+scratch (m, l, acc) persists across the sequential nk iterations and is reset at
+nk == 0 via ``pl.when``. Causal + sliding-window blocks that cannot contribute are
+skipped (no MXU work issued). GQA is expressed in the BlockSpec index maps
+(q head h reads kv head h // group).
+
+Score tiles [bq, bk] never leave VMEM — on TPU this removes the score-matrix HBM
+traffic that dominates the chunked pure-XLA fallback's memory term (see §Perf).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.0e9
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                  scale: float, causal: bool, window: int, softcap: float,
+                  bq: int, bk: int, nk: int, seq: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q_lo = iq * bq
+    k_lo = ik * bk
+    # static-shape block skip test (trace-time values are dynamic; use lax.cond
+    # semantics via pl.when)
+    need = jnp.bool_(True)
+    if causal:
+        need = need & (k_lo <= q_lo + bq - 1)
+    if window:
+        need = need & (k_lo + bk - 1 >= q_lo - (window - 1))
+
+    @pl.when(need)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)          # [bq, dh]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # [bk, dh]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = kpos < seq
+        if causal:
+            ok &= qpos >= kpos
+        if window:
+            ok &= qpos - kpos < window
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_sc[...]                                  # [bq]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_sc[...] = l_sc[...] * alpha + jnp.sum(p, axis=-1)
+        m_sc[...] = m_new
+        acc_sc[...] = acc_sc[...] * alpha[:, None] + p @ v
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_sc[...], 1e-20)
+        o_ref[0, :, 0, :] = (acc_sc[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           softcap: float = 0.0, scale: float | None = None,
+                           bq: int = 256, bk: int = 256,
+                           interpret: bool = False):
+    """q: [B,S,H,dh], k/v: [B,S,Kv,dh]. Forward only."""
+    B, S, H, dh = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    if scale is None:
+        scale = 1.0 / math.sqrt(dh)
+    bq = min(bq, S)
+    bk = min(bk, S)
+    padq = (-S) % bq
+    padk = (-S) % bk
+    if padq or padk:
+        q = jnp.pad(q, ((0, 0), (0, padq), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, padk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, padk), (0, 0), (0, 0)))
+    Sq, Sk = q.shape[1], k.shape[1]
+    nq, nk = Sq // bq, Sk // bk
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, bq=bq, bk=bk, nk=nk, seq=S)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, dh), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bk, 1, dh), lambda b, h, i, j, g=G: (b, j, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, dh), lambda b, h, i, j, g=G: (b, j, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, dh), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, dh), q.dtype),
+        scratch_shapes=[
+            _vmem((bq,), jnp.float32),        # running max
+            _vmem((bq,), jnp.float32),        # running denominator
+            _vmem((bq, dh), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :S]
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,49 @@
+"""Jit'd wrapper: Pallas flash (TPU) or interpret-mode / chunked jnp (CPU).
+
+Training uses a custom_vjp: Pallas forward + reference backward (XLA-differentiated
+recompute) — forward inference/serving is where the kernel matters most.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnames=("causal", "window", "softcap", "scale",
+                                     "use_pallas"))
+def flash_attention(q, k, v, causal=True, window=0, softcap=0.0, scale=None,
+                    use_pallas=None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      softcap=softcap, scale=scale,
+                                      interpret=not _on_tpu())
+    return attention_ref(q, k, v, causal=causal, window=window,
+                         softcap=softcap, scale=scale)
+
+
+def _fwd(q, k, v, causal, window, softcap, scale, use_pallas):
+    o = flash_attention(q, k, v, causal, window, softcap, scale, use_pallas)
+    return o, (q, k, v)
+
+
+def _bwd(causal, window, softcap, scale, use_pallas, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal,
+                                         window=window, softcap=softcap,
+                                         scale=scale), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash attention kernel (causal GQA, softcap, window)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0, scale: float | None = None):
+    """q: [B,S,H,dh], k/v: [B,S,Kv,dh] -> [B,S,H,dh]."""
+    B, S, H, dh = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    if scale is None:
+        scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(B, S, Kv, G, dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(S)
+    rel = pos[:, None] - pos[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= rel >= 0
+    if window:
+        ok &= rel < window
+    s = jnp.where(ok[None, None, None], s, -2e9)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    return o.reshape(B, S, H, dh)

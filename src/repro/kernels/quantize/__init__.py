@@ -1,0 +1,1 @@
+from repro.kernels.quantize.ops import quantize, dequantize

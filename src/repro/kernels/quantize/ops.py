@@ -1,0 +1,33 @@
+"""Jit'd public wrapper: Pallas on TPU, interpret-mode Pallas or jnp ref on CPU."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quantize.kernel import quantize_pallas, dequantize_pallas
+from repro.kernels.quantize.ref import quantize_ref, dequantize_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block", "use_pallas"))
+def quantize(x, *, block: int = 256, use_pallas: bool | None = None):
+    """x: [R, C] -> (q int8 [R,C], scales f32 [R, C//block])."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return quantize_pallas(x, block=block, interpret=not _on_tpu())
+    return quantize_ref(x, block=block)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "use_pallas"))
+def dequantize(q, s, *, block: int = 256, use_pallas: bool | None = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return dequantize_pallas(q, s, block=block, interpret=not _on_tpu())
+    return dequantize_ref(q, s, block=block)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for block int8 quantization (matches core/compression.py)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x, block: int = 256):
+    """x: [R, C] float (C % block == 0) -> (q int8 [R, C], scales f32 [R, C/block])."""
+    R, C = x.shape
+    nb = C // block
+    xb = x.astype(jnp.float32).reshape(R, nb, block)
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(R, C), scale
+
+
+def dequantize_ref(q, scale, dtype=jnp.float32, block: int = 256):
+    R, C = q.shape
+    nb = C // block
+    xb = q.reshape(R, nb, block).astype(jnp.float32) * scale[..., None]
+    return xb.reshape(R, C).astype(dtype)

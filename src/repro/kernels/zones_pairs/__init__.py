@@ -1,0 +1,1 @@
+from repro.kernels.zones_pairs.ops import pair_count, pair_hist

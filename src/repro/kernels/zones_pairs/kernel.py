@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: blockwise pair search for the Zones algorithm.
+
+The compute hot spot of the paper's Neighbor Searching / Neighbor Statistics apps:
+for two tiles of unit vectors, form the [TM, TN] dot-product tile on the MXU and
+reduce (count >= cos_min, or cumulative per-edge counts for the histogram app).
+The [TM, TN] score tile lives only in VMEM — the analogue of the paper's insight that
+the reducer should never write O(n^2) intermediates.
+
+Grid is (M/TM, N/TN); per-tile partial results land in an [gm, gn] (or [gm, gn, NB])
+output that the caller sums — keeping the kernel free of cross-tile accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TM = 256
+TN = 256
+
+
+def _count_kernel(a_ref, b_ref, cmin_ref, o_ref, *, exclude_self: bool):
+    a = a_ref[...].astype(jnp.float32)              # [TM, 3->pad]
+    b = b_ref[...].astype(jnp.float32)              # [TN, 3->pad]
+    dots = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    ok = dots >= cmin_ref[0]
+    if exclude_self:
+        i = pl.program_id(0)
+        j = pl.program_id(1)
+        tm, tn = dots.shape
+        ri = jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 0) + i * tm
+        rj = jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 1) + j * tn
+        ok = ok & (ri != rj)
+    o_ref[0, 0] = jnp.sum(ok.astype(jnp.int32))
+
+
+def _hist_kernel(a_ref, b_ref, edges_ref, o_ref, *, exclude_self: bool):
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    dots = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    if exclude_self:
+        i = pl.program_id(0)
+        j = pl.program_id(1)
+        tm, tn = dots.shape
+        ri = jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 0) + i * tm
+        rj = jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 1) + j * tn
+        dots = jnp.where(ri == rj, -2.0, dots)
+    edges = edges_ref[...]                           # [NB]
+    nb = edges.shape[0]
+
+    def bin_body(k, _):
+        o_ref[0, 0, k] = jnp.sum((dots >= edges[k]).astype(jnp.int32))
+        return 0
+
+    jax.lax.fori_loop(0, nb, bin_body, 0)
+
+
+def _pad3(x):
+    """Pad the coordinate dim 3 -> 128 (lane alignment); zeros don't affect dots."""
+    return jnp.pad(x, ((0, 0), (0, 125)))
+
+
+def pair_count_pallas(a, b, cos_min, *, exclude_self: bool = False,
+                      tm: int = TM, tn: int = TN, interpret: bool = False):
+    M, N = a.shape[0], b.shape[0]
+    assert M % tm == 0 and N % tn == 0, (M, N, tm, tn)
+    gm, gn = M // tm, N // tn
+    cmin = jnp.full((1,), cos_min, jnp.float32)
+    out = pl.pallas_call(
+        functools.partial(_count_kernel, exclude_self=exclude_self),
+        grid=(gm, gn),
+        in_specs=[pl.BlockSpec((tm, 128), lambda i, j: (i, 0)),
+                  pl.BlockSpec((tn, 128), lambda i, j: (j, 0)),
+                  pl.BlockSpec((1,), lambda i, j: (0,))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gm, gn), jnp.int32),
+        interpret=interpret,
+    )(_pad3(a), _pad3(b), cmin)
+    return jnp.sum(out, dtype=jnp.int32)
+
+
+def pair_hist_pallas(a, b, cos_edges, *, exclude_self: bool = False,
+                     tm: int = TM, tn: int = TN, interpret: bool = False):
+    M, N = a.shape[0], b.shape[0]
+    assert M % tm == 0 and N % tn == 0, (M, N, tm, tn)
+    gm, gn = M // tm, N // tn
+    nbins = cos_edges.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_hist_kernel, exclude_self=exclude_self),
+        grid=(gm, gn),
+        in_specs=[pl.BlockSpec((tm, 128), lambda i, j: (i, 0)),
+                  pl.BlockSpec((tn, 128), lambda i, j: (j, 0)),
+                  pl.BlockSpec((nbins,), lambda i, j: (0,))],
+        out_specs=pl.BlockSpec((1, 1, nbins), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((gm, gn, nbins), jnp.int32),
+        interpret=interpret,
+    )(_pad3(a), _pad3(b), jnp.asarray(cos_edges, jnp.float32))
+    return jnp.sum(out, axis=(0, 1), dtype=jnp.int32)

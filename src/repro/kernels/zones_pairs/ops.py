@@ -1,0 +1,36 @@
+"""Jit'd wrapper selecting Pallas (TPU) or the jnp reference (CPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.zones_pairs.kernel import pair_count_pallas, pair_hist_pallas
+from repro.kernels.zones_pairs.ref import pair_count_ref, pair_hist_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("exclude_self", "use_pallas"))
+def pair_count(a, b, cos_min, *, exclude_self: bool = False,
+               use_pallas: bool | None = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return pair_count_pallas(a, b, cos_min, exclude_self=exclude_self,
+                                 interpret=not _on_tpu())
+    return pair_count_ref(a, b, cos_min, exclude_self=exclude_self)
+
+
+@functools.partial(jax.jit, static_argnames=("exclude_self", "use_pallas"))
+def pair_hist(a, b, cos_edges, *, exclude_self: bool = False,
+              use_pallas: bool | None = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return pair_hist_pallas(a, b, cos_edges, exclude_self=exclude_self,
+                                interpret=not _on_tpu())
+    return pair_hist_ref(a, b, cos_edges, exclude_self=exclude_self)

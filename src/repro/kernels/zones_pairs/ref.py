@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the Zones pair kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pair_count_ref(a, b, cos_min, *, exclude_self: bool = False):
+    """a: [M,3], b: [N,3] unit vectors. Count of (i,j) with a_i . b_j >= cos_min.
+
+    exclude_self: drop the diagonal (use when a and b are the same block).
+    """
+    dots = a.astype(jnp.float32) @ b.astype(jnp.float32).T
+    ok = dots >= cos_min
+    if exclude_self:
+        M, N = ok.shape
+        ok = ok & ~jnp.eye(M, N, dtype=bool)
+    return jnp.sum(ok, dtype=jnp.int32)
+
+
+def pair_hist_ref(a, b, cos_edges, *, exclude_self: bool = False):
+    """Cumulative counts per edge: out[k] = #{(i,j): dot >= cos_edges[k]}.
+
+    cos_edges descending in angle (i.e. cos ascending? NO: theta_k ascending =>
+    cos_edges descending). The differential histogram for bin (theta_{k-1},theta_k]
+    is out[k] - out[k-1].
+    """
+    dots = a.astype(jnp.float32) @ b.astype(jnp.float32).T
+    if exclude_self:
+        M, N = dots.shape
+        dots = jnp.where(jnp.eye(M, N, dtype=bool), -2.0, dots)
+    return jnp.sum(dots[None, :, :] >= cos_edges[:, None, None],
+                   axis=(1, 2), dtype=jnp.int32)

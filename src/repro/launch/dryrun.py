@@ -1,0 +1,302 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# NOTE: the two lines above must run before ANY other import (jax locks the device
+# count on first init). --devices N overrides for the tiny subprocess tests.
+import sys  # noqa: E402
+
+if "--devices" in sys.argv:
+    _n = sys.argv[sys.argv.index("--devices") + 1]
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_n}"
+
+import argparse        # noqa: E402
+import dataclasses     # noqa: E402
+import json            # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+
+import jax             # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import (ARCHS, SHAPES, RunConfig, cell_is_applicable,
+                           get_arch, get_shape)  # noqa: E402
+from repro.core.amdahl import (RooflineTerms, model_flops_decode,
+                               model_flops_prefill,
+                               model_flops_train)  # noqa: E402
+from repro.core.balance import balance_report, suggest  # noqa: E402
+from repro.core.hlo_analysis import analyze_hlo, op_census  # noqa: E402
+from repro.launch.mesh import (make_production_mesh, make_tiny_mesh,
+                               pod_size)  # noqa: E402
+from repro.models import model as mdl  # noqa: E402
+from repro.parallel.sharding import make_rules, sharding_tree, use_mesh  # noqa: E402
+from repro.serving.engine import make_decode_step, make_prefill_step  # noqa: E402
+from repro.training.state import abstract_state  # noqa: E402
+from repro.training.step import make_train_step  # noqa: E402
+
+
+def rc_for_mode(cfg, shape, mode: str, overrides: dict | None = None) -> RunConfig:
+    # gradient accumulation keeps train-step activation memory within HBM
+    # (1M tokens/step at global batch 256 x 4k otherwise peaks several x 16G)
+    micro = {"train": 16 if cfg.n_params() > 1e11 else
+             (8 if cfg.moe is not None else 4)}.get(shape.kind, 0)
+    base = RunConfig(arch=cfg.name, shape=shape.name, remat="full",
+                     pod_param_mode="sharded", microbatch=micro)
+    if mode == "baseline":
+        rc = base.paper_faithful()
+    elif mode == "optimized":
+        # blocked_causal pays off only when attention heads shard over the model
+        # axis; with the sequence-sharded fallback its dynamic block slices turn
+        # into gathers (measured: granite hc1, collective term 6x WORSE)
+        blocked = cfg.n_heads % 16 == 0
+        rc = dataclasses.replace(
+            base, bucketed_updates=True, donate_state=True,
+            hierarchical_sync=True,
+            compress_moe_a2a=cfg.moe is not None,
+            attention_impl="blocked_causal" if blocked else "masked")
+    else:
+        raise ValueError(mode)
+    if overrides:
+        rc = dataclasses.replace(rc, **overrides)
+    return rc
+
+
+def _abstract_params_sharded(cfg, mesh, rules):
+    ps, bs = mdl.model_schema(cfg)
+    from repro.parallel.sharding import abstract_params
+    with use_mesh(mesh, rules):
+        ap, ab = abstract_params(ps), abstract_params(bs)
+        sp, sb = sharding_tree(ps, mesh, rules), sharding_tree(bs, mesh, rules)
+    mk = lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s)
+    return jax.tree.map(mk, ap, sp), jax.tree.map(mk, ab, sb)
+
+
+def _abstract_cache_sharded(cfg, mesh, rules, batch, max_len):
+    from repro.models.transformer import cache_schema
+    from repro.parallel.sharding import abstract_params
+    sch = cache_schema(cfg, batch, max_len)
+    with use_mesh(mesh, rules):
+        ac = abstract_params(sch)
+        sc = sharding_tree(sch, mesh, rules)
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s), ac, sc)
+
+
+def build_lowering(cfg, shape, mesh, rc):
+    """-> (lowered, rules, model_flops)."""
+    n_active = cfg.n_params_active()
+    if shape.kind == "train":
+        fn, st_abs, st_sh, rules = make_train_step(cfg, rc, mesh)
+        batch_abs = mdl.input_specs(cfg, shape, mesh, rules)
+        lowered = fn.lower(st_abs, batch_abs)
+        mf = model_flops_train(n_active, shape.global_batch * shape.seq_len)
+    elif shape.kind == "prefill":
+        fn, rules = make_prefill_step(cfg, rc, mesh, max_len=shape.seq_len)
+        p_abs, b_abs = _abstract_params_sharded(cfg, mesh, rules)
+        batch_abs = mdl.input_specs(cfg, shape, mesh, rules)
+        lowered = fn.lower(p_abs, b_abs, batch_abs)
+        mf = model_flops_prefill(n_active, shape.global_batch * shape.seq_len)
+    else:  # decode
+        fn, rules = make_decode_step(cfg, rc, mesh)
+        p_abs, b_abs = _abstract_params_sharded(cfg, mesh, rules)
+        cache_abs = _abstract_cache_sharded(cfg, mesh, rules,
+                                            shape.global_batch, shape.seq_len)
+        from repro.parallel.sharding import spec_for
+        from jax.sharding import NamedSharding
+        with use_mesh(mesh, rules):
+            tok = jax.ShapeDtypeStruct(
+                (shape.global_batch, 1), jnp.int32,
+                sharding=NamedSharding(mesh, spec_for((shape.global_batch, 1),
+                                                      ("batch", None), mesh,
+                                                      rules)))
+        pos = jax.ShapeDtypeStruct((), jnp.int32,
+                                   sharding=NamedSharding(mesh, jax.sharding.PartitionSpec()))
+        lowered = fn.lower(p_abs, b_abs, cache_abs, tok, pos)
+        mf = model_flops_decode(n_active, shape.global_batch)
+    return lowered, rules, mf
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, mode: str,
+             out_dir: str, force: bool = False, overrides: dict | None = None,
+             tag: str = "", moe_overrides: dict | None = None) -> dict:
+    cfg = get_arch(arch)
+    if moe_overrides and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, **moe_overrides))
+    shape = get_shape(shape_name)
+    ok, reason = cell_is_applicable(cfg, shape)
+    meshname = {"single": "16x16", "multi": "2x16x16",
+                "tiny": "tiny", "tinymulti": "tinymulti"}[mesh_kind]
+    name = f"{arch}__{shape_name}__{meshname}__{mode}{tag}"
+    path = os.path.join(out_dir, name + ".json")
+    if not ok:
+        rec = {"cell": name, "status": "skipped", "reason": reason}
+        os.makedirs(out_dir, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[skip] {name}: {reason}")
+        return rec
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "ok":
+            print(f"[cached] {name}")
+            return rec
+
+    if mesh_kind == "single":
+        mesh = make_production_mesh(multi_pod=False)
+    elif mesh_kind == "multi":
+        mesh = make_production_mesh(multi_pod=True)
+    elif mesh_kind == "tiny":
+        mesh = make_tiny_mesh(multi_pod=False)
+    else:
+        mesh = make_tiny_mesh(multi_pod=True)
+    n_dev = mesh.size
+    rc = rc_for_mode(cfg, shape, mode, overrides)
+
+    t0 = time.time()
+    rec = {"cell": name, "arch": arch, "shape": shape_name, "mesh": meshname,
+           "mode": mode, "devices": n_dev,
+           "rc": {k: v for k, v in dataclasses.asdict(rc).items()
+                  if not k.startswith("_")}}
+    try:
+        lowered, rules, mf = build_lowering(cfg, shape, mesh, rc)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        print(mem)                                    # proves it fits
+        cost = compiled.cost_analysis()
+        print({k: cost.get(k) for k in ("flops", "bytes accessed")})
+        hlo = compiled.as_text()
+        a = analyze_hlo(hlo, pod_size=pod_size(mesh))
+        terms = RooflineTerms(
+            flops=a.flops * n_dev,
+            hbm_bytes=a.hbm_bytes * n_dev,
+            coll_bytes_intra=a.coll_wire_intra * n_dev,
+            coll_bytes_cross=a.coll_wire_cross * n_dev,
+            chips=n_dev, model_flops=mf)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            hlo_bytes=len(hlo),
+            memory={
+                "argument_bytes_per_device": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes_per_device": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+                "alias_bytes_per_device": getattr(mem, "alias_size_in_bytes", None),
+            },
+            cost_analysis={k: cost.get(k) for k in ("flops", "bytes accessed")},
+            analyzer=a.summary(),
+            terms=terms.to_dict(),
+            n_params=cfg.n_params(),
+            n_params_active=cfg.n_params_active(),
+            suggestion=suggest(terms),
+        )
+        print(balance_report(name, terms))
+        print("  ->", suggest(terms))
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[ERROR] {name}: {e}")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def summarize(out_dir: str):
+    rows = []
+    for fn in sorted(os.listdir(out_dir)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(out_dir, fn)) as f:
+            rec = json.load(f)
+        rows.append(rec)
+    print(f"{'cell':66s} {'status':8s} {'dom':10s} {'step_ms':>9s} "
+          f"{'roofline%':>9s} {'bytes/dev':>10s}")
+    for r in rows:
+        if r.get("status") != "ok":
+            print(f"{r.get('cell','?'):66s} {r.get('status','?'):8s} "
+                  f"{r.get('reason', r.get('error',''))[:60]}")
+            continue
+        t = r["terms"]
+        mem = r["memory"]["argument_bytes_per_device"] or 0
+        tmp = r["memory"]["temp_bytes_per_device"] or 0
+        print(f"{r['cell']:66s} {'ok':8s} {t['dominant']:10s} "
+              f"{t['step_time_s']*1e3:9.2f} {t['roofline_fraction']*100:8.1f}% "
+              f"{(mem+tmp)/1e9:9.2f}G")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "tiny", "tinymulti", "both"])
+    ap.add_argument("--mode", default="baseline",
+                    choices=["baseline", "optimized"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--devices", default=None)   # consumed pre-import
+    ap.add_argument("--summarize", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--set", action="append", default=[],
+                    help="RunConfig overrides k=v (hillclimb knobs)")
+    ap.add_argument("--set-moe", action="append", default=[],
+                    help="MoEConfig overrides k=v (hillclimb knobs)")
+    args = ap.parse_args()
+
+    if args.summarize:
+        summarize(args.out)
+        return
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        fields = {f.name: f.type for f in dataclasses.fields(RunConfig)}
+        if v in ("True", "False", "true", "false"):
+            v = v.lower() == "true"
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        overrides[k] = v
+
+    moe_overrides = {}
+    for kv in args.set_moe:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+        moe_overrides[k] = v
+
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+    n_ok = n_err = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                rec = run_cell(arch, shape, mk, args.mode, args.out,
+                               force=args.force, overrides=overrides or None,
+                               tag=args.tag,
+                               moe_overrides=moe_overrides or None)
+                st = rec.get("status")
+                n_ok += st == "ok"
+                n_err += st == "error"
+                n_skip += st == "skipped"
+    print(f"\ndone: ok={n_ok} err={n_err} skip={n_skip}")
+    if n_err:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Production meshes. Functions (not module constants) so importing never touches
+jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_tiny_mesh(*, multi_pod: bool = False):
+    """8-device mesh for subprocess tests (XLA_FLAGS host device count = 8)."""
+    shape = (2, 2, 2) if multi_pod else (2, 4)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_cpu_mesh():
+    """Single-device mesh with the standard axis names (smoke tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def pod_size(mesh) -> int:
+    """Devices per pod (for cross-pod collective classification)."""
+    if "pod" not in mesh.axis_names:
+        return 0
+    n = 1
+    for a, s in zip(mesh.axis_names, mesh.devices.shape):
+        if a != "pod":
+            n *= s
+    return n

@@ -1,0 +1,3 @@
+from repro.mapreduce.api import bucket_by_zone, sharded_zone_reduce, ZonedData
+from repro.mapreduce.zones import neighbor_search_count, neighbor_pairs_dense
+from repro.mapreduce.stats import neighbor_statistics

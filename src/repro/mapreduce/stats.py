@@ -1,0 +1,39 @@
+"""Neighbor Statistics (the paper's compute-intensive app): pair-distance histogram.
+
+Same map/shuffle as Neighbor Searching; reducers emit per-zone cumulative counts per
+angular edge (theta in {1..60 arcsec} by default), the combine step (the paper's second
+trivial MapReduce) psums and differentiates the cumulative counts.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.sky import ARCSEC
+from repro.kernels.zones_pairs.ops import pair_hist
+from repro.mapreduce.api import bucket_by_zone, sharded_zone_reduce
+
+
+def neighbor_statistics(xyz: np.ndarray, *, edges_arcsec=None, mesh=None,
+                        compress_coords: bool = False,
+                        use_pallas: bool | None = None,
+                        tile: int = 256) -> np.ndarray:
+    """-> histogram over (0, e1], (e1, e2], ... in arcsec (unordered pairs)."""
+    if edges_arcsec is None:
+        edges_arcsec = np.arange(1, 61, dtype=np.float64)
+    edges_rad = np.asarray(edges_arcsec, np.float64) * ARCSEC
+    radius = float(edges_rad[-1])
+    pad_z = (mesh.shape["data"] if mesh is not None and
+             "data" in mesh.axis_names else 1)
+    zd = bucket_by_zone(xyz, radius, tile=tile,
+                        compress_coords=compress_coords, pad_zones_to=pad_z)
+    cos_edges = jnp.asarray(np.cos(edges_rad), jnp.float32)
+
+    def per_zone(owned_z, bucket_z):
+        return pair_hist(owned_z, bucket_z, cos_edges, use_pallas=use_pallas)
+
+    cum = np.asarray(sharded_zone_reduce(per_zone, zd, mesh)).astype(np.int64)
+    cum -= int(zd.n_owned.sum())          # self pairs (theta=0) hit every edge
+    cum //= 2                             # each unordered pair seen twice
+    hist = np.diff(np.concatenate([[0], cum]))
+    return hist

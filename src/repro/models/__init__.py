@@ -1,0 +1,6 @@
+from repro.models import model
+from repro.models.model import (
+    model_schema, init, abstract, forward, loss_fn, prefill, decode_step,
+    input_specs, cache_abstract, init_cache, count_params_analytic,
+    count_params_total, param_shardings, cache_shardings,
+)

@@ -1,0 +1,451 @@
+"""Attention: GQA/MQA/MHA, sliding-window, cross-attention, and DeepSeek MLA.
+
+Three interchangeable inner loops (``impl``):
+
+- ``masked``          full scores + additive mask. Fine for short sequences.
+- ``chunked``         lax.scan over KV chunks with online softmax (flash-style in pure
+                      XLA): bounded memory, still computes masked-out blocks (2x causal
+                      FLOP waste — this is the paper-faithful baseline).
+- ``blocked_causal``  static triangular block schedule: only (q-block, kv-block) pairs
+                      that intersect the causal/window mask are computed. Removes the
+                      masked-FLOP waste; the §Perf hillclimb quantifies it.
+
+On TPU the Pallas flash kernel (kernels/flash_attention) replaces the inner loop via
+ops.py; the dry-run and CPU tests use these pure-JAX paths (identical FLOP/byte
+semantics for roofline purposes).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.common import rope, softcap
+from repro.parallel.sharding import ParamDef, axis_size, shard_act
+
+NEG_INF = -2.0e9
+
+
+# ---------------------------------------------------------------------------
+# Schemas
+# ---------------------------------------------------------------------------
+
+def attn_schema(cfg: ArchConfig, kind: str) -> dict:
+    """kind: attn | local | cross."""
+    D, H, Kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    if cfg.mla is not None and kind != "cross":
+        m = cfg.mla
+        dq = m.nope_head_dim + m.rope_head_dim
+        return {
+            "w_dq": ParamDef((D, m.q_lora_rank), ("embed", None)),
+            "q_norm": ParamDef((m.q_lora_rank,), (None,), init="zeros"),
+            "w_uq": ParamDef((m.q_lora_rank, H, dq), (None, "heads", None)),
+            "w_dkv": ParamDef((D, m.kv_lora_rank), ("embed", None)),
+            "kv_norm": ParamDef((m.kv_lora_rank,), (None,), init="zeros"),
+            "w_uk": ParamDef((m.kv_lora_rank, H, m.nope_head_dim), (None, "heads", None)),
+            "w_uv": ParamDef((m.kv_lora_rank, H, m.v_head_dim), (None, "heads", None)),
+            "w_kr": ParamDef((D, m.rope_head_dim), ("embed", None)),
+            "w_o": ParamDef((H, m.v_head_dim, D), ("heads", None, "embed")),
+        }
+    return {
+        "w_q": ParamDef((D, H, dh), ("embed", "heads", None)),
+        "w_k": ParamDef((D, Kv, dh), ("embed", "kv_heads", None)),
+        "w_v": ParamDef((D, Kv, dh), ("embed", "kv_heads", None)),
+        "w_o": ParamDef((H, dh, D), ("heads", None, "embed")),
+    }
+
+
+def cache_def(cfg: ArchConfig, kind: str, batch: int, max_len: int) -> dict:
+    """Shape/dims template for a decode cache entry (leaves are ParamDef-like).
+
+    Sharding preference: kv-heads over ``model`` when divisible, else the SEQ dim.
+    (Sharding the contraction dim dh makes GSPMD re-gather the whole cache every
+    decode step — observed as the dominant collective term; seq-sharding keeps the
+    per-step exchange at score size instead of cache size.)
+    """
+    Kv, dh = cfg.n_kv_heads, cfg.dh
+    seq_pref = cfg.cache_seq_shard          # per-arch override (§Perf cell B)
+    if cfg.mla is not None and kind != "cross":
+        m = cfg.mla
+        return {
+            "ckv": ParamDef((batch, max_len, m.kv_lora_rank),
+                            ("batch", None, "head_dim"), init="zeros"),
+            "kr": ParamDef((batch, max_len, m.rope_head_dim),
+                           ("batch", None, None), init="zeros"),
+        }
+    L = min(max_len, cfg.window) if kind == "local" and cfg.window else max_len
+    if kind == "cross":
+        L = cfg.cond_len
+    # preference: kv-heads > head-dim (first-fit with divisibility is resolved by
+    # spec_for at sharding time). Seq-sharding is only a win where GSPMD would
+    # otherwise re-gather the cache (measured per arch; internvl2 opts in via
+    # cache_seq_shard — §Perf cell B): the per-step cache update on a seq-sharded
+    # dim costs a replicate-repartition elsewhere.
+    if seq_pref:
+        dims = ("batch", "seq_model", None, None)
+    else:
+        dims = ("batch", None, "kv_heads", "head_dim")
+    return {
+        "k": ParamDef((batch, L, Kv, dh), dims, init="zeros"),
+        "v": ParamDef((batch, L, Kv, dh), dims, init="zeros"),
+    }
+
+
+def _qkv_act_dims(cfg: ArchConfig) -> tuple:
+    """Prefer head sharding; fall back to sequence sharding (Ulysses-style)."""
+    tp = axis_size("model")
+    if cfg.n_heads % tp == 0:
+        return ("batch", None, "heads", None)
+    return ("batch", "seq_model", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Core attend
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: int, k_valid=None):
+    """Additive fp32 bias [*, Sq, Sk] from position vectors."""
+    rel = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = jnp.ones(rel.shape, bool)
+    if causal:
+        ok &= rel >= 0
+    if window:
+        ok &= rel < window
+    if k_valid is not None:
+        ok &= k_valid[..., None, :]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _scores(q, k, scale, cap):
+    # q: [B,Sq,Kv,G,dh]  k: [B,Sk,Kv,dh] -> [B,Kv,G,Sq,Sk]
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    return softcap(s, cap) if cap else s
+
+
+def _ctx(p, v):
+    # p: [B,Kv,G,Sq,Sk]  v: [B,Sk,Kv,dv] -> [B,Sq,Kv,G,dv]
+    return jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+
+
+def attend(q, k, v, *, causal: bool, window: int = 0, cap: float = 0.0,
+           scale: float | None = None, impl: str = "masked", chunk: int = 1024,
+           q_pos=None, k_pos=None, k_valid=None):
+    """q: [B,Sq,H,dh], k/v: [B,Sk,Kv,d*]. Returns [B,Sq,H,dv]."""
+    B, Sq, H, dh = q.shape
+    Sk, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    dv = v.shape[-1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(dh)
+    if q_pos is None:
+        q_pos = jnp.arange(Sq)
+    if k_pos is None:
+        k_pos = jnp.arange(Sk)
+    qg = q.reshape(B, Sq, Kv, G, dh)
+
+    if impl == "masked" or Sk <= chunk:
+        s = _scores(qg, k, scale, cap)
+        s = s + _mask_bias(q_pos, k_pos, causal=causal, window=window,
+                           k_valid=k_valid)
+        p = jax.nn.softmax(s, axis=-1)
+        o = _ctx(p, v)
+        return o.reshape(B, Sq, H, dv)
+
+    if impl == "chunked":
+        return _attend_chunked(qg, k, v, scale=scale, cap=cap, causal=causal,
+                               window=window, chunk=chunk, q_pos=q_pos,
+                               k_pos=k_pos, k_valid=k_valid).reshape(B, Sq, H, dv)
+
+    if impl == "blocked_causal":
+        return _attend_blocked(qg, k, v, scale=scale, cap=cap, causal=causal,
+                               window=window, chunk=chunk).reshape(B, Sq, H, dv)
+
+    raise ValueError(impl)
+
+
+def _attend_chunked(qg, k, v, *, scale, cap, causal, window, chunk,
+                    q_pos, k_pos, k_valid):
+    """Online-softmax scan over KV chunks. Computes all blocks (masked baseline)."""
+    B, Sq, Kv, G, dh = qg.shape
+    Sk, dv = k.shape[1], v.shape[-1]
+    nck = -(-Sk // chunk)
+    pad = nck * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-1)
+        kv_flag = jnp.pad(k_valid if k_valid is not None
+                          else jnp.ones((Sk,), bool), (0, pad))
+    else:
+        kv_flag = k_valid if k_valid is not None else jnp.ones((Sk,), bool)
+
+    m0 = jnp.full((B, Kv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Kv, G, Sq), jnp.float32)
+    o0 = jnp.zeros((B, Sq, Kv, G, dv), jnp.float32)
+
+    @jax.checkpoint
+    def body(carry, i):
+        m, l, o = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, i * chunk, chunk, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, i * chunk, chunk, axis=1)
+        kp = jax.lax.dynamic_slice_in_dim(k_pos, i * chunk, chunk, axis=0)
+        kf = jax.lax.dynamic_slice_in_dim(kv_flag, i * chunk, chunk, axis=0)
+        s = _scores(qg, ks, scale, cap)
+        s = s + _mask_bias(q_pos, kp, causal=causal, window=window, k_valid=kf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        o_new = o * jnp.transpose(alpha, (0, 3, 1, 2))[..., None] + \
+            _ctx(p, vs.astype(jnp.float32))
+        return (m_new, l_new, o_new), None
+
+    (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0), jnp.arange(nck))
+    l = jnp.maximum(l, 1e-20)
+    o = o / jnp.transpose(l, (0, 3, 1, 2))[..., None]
+    return o.astype(qg.dtype)
+
+
+def _attend_blocked(qg, k, v, *, scale, cap, causal, window, chunk):
+    """Static triangular block schedule: only blocks intersecting the mask run.
+
+    Assumes q_pos == k_pos == arange(S) (self-attention training/prefill).
+    """
+    B, Sq, Kv, G, dh = qg.shape
+    Sk, dv = k.shape[1], v.shape[-1]
+    assert Sq == Sk, "blocked_causal is for self-attention"
+    nb = -(-Sq // chunk)
+    pad = nb * chunk - Sq
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S = nb * chunk
+
+    pairs = []
+    for qi in range(nb):
+        lo = 0
+        if window:
+            lo = max(0, (qi * chunk - (window - 1)) // chunk)
+        hi = qi if causal else nb - 1
+        for kj in range(lo, hi + 1):
+            pairs.append((qi, kj))
+    qi_arr = jnp.asarray(np.array([p[0] for p in pairs], np.int32))
+    kj_arr = jnp.asarray(np.array([p[1] for p in pairs], np.int32))
+
+    m0 = jnp.full((nb, B, Kv, G, chunk), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((nb, B, Kv, G, chunk), jnp.float32)
+    o0 = jnp.zeros((nb, B, chunk, Kv, G, dv), jnp.float32)
+    pos = jnp.arange(S)
+
+    @jax.checkpoint
+    def body(carry, qikj):
+        m, l, o = carry
+        qi, kj = qikj
+        qs = jax.lax.dynamic_slice_in_dim(qg, qi * chunk, chunk, axis=1)
+        ks = jax.lax.dynamic_slice_in_dim(k, qi * 0 + kj * chunk, chunk, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, kj * chunk, chunk, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(pos, qi * chunk, chunk, axis=0)
+        kp = jax.lax.dynamic_slice_in_dim(pos, kj * chunk, chunk, axis=0)
+        valid_q = qp < Sq
+        s = _scores(qs, ks, scale, cap)
+        s = s + _mask_bias(qp, kp, causal=causal, window=window,
+                           k_valid=kp < Sq)
+        mi = jax.lax.dynamic_index_in_dim(m, qi, 0, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, qi, 0, keepdims=False)
+        oi = jax.lax.dynamic_index_in_dim(o, qi, 0, keepdims=False)
+        m_new = jnp.maximum(mi, jnp.max(s, axis=-1))
+        alpha = jnp.exp(mi - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = li * alpha + jnp.sum(p, axis=-1)
+        o_new = oi * jnp.transpose(alpha, (0, 3, 1, 2))[..., None] + \
+            _ctx(p, vs.astype(jnp.float32))
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, qi, 0)
+        o = jax.lax.dynamic_update_index_in_dim(o, o_new, qi, 0)
+        del valid_q
+        return (m, l, o), None
+
+    (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0), (qi_arr, kj_arr))
+    l = jnp.maximum(l, 1e-20)
+    o = o / jnp.transpose(l, (0, 1, 4, 2, 3))[..., None]     # [nb,B,c,Kv,G,dv]
+    o = o.reshape(nb, B, chunk, Kv, G, dv)
+    o = jnp.moveaxis(o, 0, 1).reshape(B, S, Kv, G, dv)[:, :Sq]
+    return o.astype(qg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Standard (GQA) attention layer: train / prefill / decode
+# ---------------------------------------------------------------------------
+
+def gqa_apply(cfg: ArchConfig, p: dict, x, *, kind: str, positions,
+              impl: str, chunk: int, cond=None, make_cache: int = 0):
+    """x: [B,S,D]. kind: attn|local|cross. Returns (y, cache_entry|None)."""
+    B, S, D = x.shape
+    dims = _qkv_act_dims(cfg)
+    if kind == "cross":
+        assert cond is not None
+        q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"])
+        k = jnp.einsum("bsd,dhk->bshk", cond, p["w_k"])
+        v = jnp.einsum("bsd,dhk->bshk", cond, p["w_v"])
+        q, k, v = shard_act(q, dims), shard_act(k, dims), shard_act(v, dims)
+        o = attend(q, k, v, causal=False, impl="masked",
+                   scale=cfg.query_scale or None, cap=cfg.attn_logit_softcap)
+        y = jnp.einsum("bshk,hkd->bsd", o, p["w_o"])
+        cache = {"k": k, "v": v} if make_cache else None
+        return y, cache
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["w_k"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["w_v"])
+    if cfg.pos == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q, k, v = shard_act(q, dims), shard_act(k, dims), shard_act(v, dims)
+    window = cfg.window if kind == "local" else 0
+    o = attend(q, k, v, causal=True, window=window, cap=cfg.attn_logit_softcap,
+               scale=cfg.query_scale or None, impl=impl, chunk=chunk)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["w_o"])
+
+    cache = None
+    if make_cache:
+        L = make_cache
+        if kind == "local" and cfg.window and cfg.window < L:
+            L = cfg.window
+            k_c, v_c = k[:, -L:], v[:, -L:]
+            # ring-buffer layout: slot = pos % window
+            roll = (S % L)
+            k_c = jnp.roll(k_c, roll, axis=1)
+            v_c = jnp.roll(v_c, roll, axis=1)
+        else:
+            k_c = jnp.pad(k, ((0, 0), (0, L - S), (0, 0), (0, 0)))
+            v_c = jnp.pad(v, ((0, 0), (0, L - S), (0, 0), (0, 0)))
+        cache = {"k": k_c, "v": v_c}
+    return y, cache
+
+
+def gqa_decode(cfg: ArchConfig, p: dict, x1, cache: dict, pos, *, kind: str):
+    """Single-token decode. x1: [B,1,D]; pos: scalar int32 (current index)."""
+    B = x1.shape[0]
+    if kind == "cross":
+        q = jnp.einsum("bsd,dhk->bshk", x1, p["w_q"])
+        o = attend(q, cache["k"], cache["v"], causal=False, impl="masked",
+                   cap=cfg.attn_logit_softcap, scale=cfg.query_scale or None)
+        y = jnp.einsum("bshk,hkd->bsd", o, p["w_o"])
+        return y, cache
+
+    q = jnp.einsum("bsd,dhk->bshk", x1, p["w_q"])
+    k1 = jnp.einsum("bsd,dhk->bshk", x1, p["w_k"])
+    v1 = jnp.einsum("bsd,dhk->bshk", x1, p["w_v"])
+    if cfg.pos == "rope":
+        pvec = jnp.full((1,), 0, jnp.int32) + pos
+        q = rope(q, pvec, cfg.rope_theta)
+        k1 = rope(k1, pvec, cfg.rope_theta)
+
+    L = cache["k"].shape[1]
+    window = cfg.window if kind == "local" else 0
+    slot = pos % L if window else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k1.astype(cache["k"].dtype),
+                                            slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v1.astype(cache["v"].dtype),
+                                            slot, axis=1)
+    idx = jnp.arange(L)
+    if window:
+        valid = (idx <= pos % L) | (pos >= L)
+        # mask only; order irrelevant for windowed softmax (keys carry their rope)
+        o = attend(q, k, v, causal=False, impl="masked", k_valid=valid,
+                   cap=cfg.attn_logit_softcap, scale=cfg.query_scale or None)
+    else:
+        valid = idx <= pos
+        o = attend(q, k, v, causal=False, impl="masked", k_valid=valid,
+                   cap=cfg.attn_logit_softcap, scale=cfg.query_scale or None)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["w_o"])
+    return y, {"k": k, "v": v}
+
+
+def gqa_or_mla_apply(cfg: ArchConfig, p: dict, x, *, kind: str, positions,
+                     impl: str, chunk: int, make_cache: int = 0):
+    if cfg.mla is not None and kind != "cross":
+        return mla_apply(cfg, p, x, positions=positions, impl=impl, chunk=chunk,
+                         make_cache=make_cache)
+    return gqa_apply(cfg, p, x, kind=kind, positions=positions, impl=impl,
+                     chunk=chunk, make_cache=make_cache)
+
+
+def gqa_or_mla_decode(cfg: ArchConfig, p: dict, x1, cache: dict, pos, *, kind: str):
+    if cfg.mla is not None and kind != "cross":
+        return mla_decode(cfg, p, x1, cache, pos)
+    return gqa_decode(cfg, p, x1, cache, pos, kind=kind)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+def _mla_qkv(cfg: ArchConfig, p: dict, x, positions):
+    from repro.models.common import rmsnorm
+    m = cfg.mla
+    cq = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])
+    q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    ckv = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]), p["kv_norm"])
+    kr = rope(jnp.einsum("bsd,dr->bsr", x, p["w_kr"]), positions, cfg.rope_theta)
+    return q_nope, q_rope, ckv, kr
+
+
+def mla_apply(cfg: ArchConfig, p: dict, x, *, positions, impl: str, chunk: int,
+              make_cache: int = 0):
+    """Training/prefill MLA. Decompressed (naive) form — exact."""
+    m = cfg.mla
+    B, S, D = x.shape
+    q_nope, q_rope, ckv, kr = _mla_qkv(cfg, p, x, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uk"])
+    vfull = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uv"])
+    H = cfg.n_heads
+    k_rope_h = jnp.broadcast_to(kr[:, :, None, :], (B, S, H, m.rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    dims = _qkv_act_dims(cfg)
+    q, k, vfull = shard_act(q, dims), shard_act(k, dims), shard_act(vfull, dims)
+    scale = 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    o = attend(q, k, vfull, causal=True, impl=impl, chunk=chunk, scale=scale)
+    y = jnp.einsum("bshk,hkd->bsd", o, p["w_o"])
+    cache = None
+    if make_cache:
+        L = make_cache
+        cache = {"ckv": jnp.pad(ckv, ((0, 0), (0, L - S), (0, 0))),
+                 "kr": jnp.pad(kr, ((0, 0), (0, L - S), (0, 0)))}
+    return y, cache
+
+
+def mla_decode(cfg: ArchConfig, p: dict, x1, cache: dict, pos):
+    """Absorbed-matrix decode: score/context directly against the latent cache."""
+    m = cfg.mla
+    B = x1.shape[0]
+    pvec = jnp.zeros((1,), jnp.int32) + pos
+    q_nope, q_rope, ckv1, kr1 = _mla_qkv(cfg, p, x1, pvec)
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv1.astype(cache["ckv"].dtype), pos, axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(
+        cache["kr"], kr1.astype(cache["kr"].dtype), pos, axis=1)
+    # absorb W_uk into q: q_eff [B,1,H,r]
+    q_eff = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])
+    s = jnp.einsum("bshr,btr->bhst", q_eff, ckv,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bshk,btk->bhst", q_rope, kr,
+                       preferred_element_type=jnp.float32)
+    s = s / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    L = ckv.shape[1]
+    valid = jnp.arange(L) <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx_c = jnp.einsum("bhst,btr->bshr", pr.astype(ckv.dtype), ckv)
+    o = jnp.einsum("bshr,rhk->bshk", ctx_c, p["w_uv"])
+    y = jnp.einsum("bshk,hkd->bsd", o, p["w_o"])
+    return y, {"ckv": ckv, "kr": kr}

@@ -1,0 +1,123 @@
+"""Shared model primitives: norms, positions, activations, losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Norms (computed in fp32, cast back)
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale=None, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * (1.0 + scale.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def layernorm(x, scale=None, bias=None, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def apply_norm(kind: str, x, params: dict | None):
+    """kind: rmsnorm | layernorm | layernorm_np; params holds 'scale'/'bias' if any."""
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"] if params else None)
+    if kind == "layernorm":
+        return layernorm(x, params["scale"] if params else None,
+                         params.get("bias") if params else None)
+    if kind == "layernorm_np":          # OLMo: non-parametric
+        return layernorm(x, None, None)
+    raise ValueError(kind)
+
+
+def norm_schema(kind: str, d: int):
+    from repro.parallel.sharding import ParamDef
+    if kind == "rmsnorm":
+        return {"scale": ParamDef((d,), (None,), init="zeros")}
+    if kind == "layernorm":
+        return {"scale": ParamDef((d,), (None,), init="ones"),
+                "bias": ParamDef((d,), (None,), init="zeros")}
+    if kind == "layernorm_np":
+        return {}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Positions
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: [..., S, H, Dh] (or [..., S, Dh]); positions: [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) * 2.0 / dh))
+    ang = positions[..., None].astype(jnp.float32) * freq          # [..., S, half]
+    if x.ndim == ang.ndim + 2:                                      # head dim present
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(positions, d: int, dtype=jnp.bfloat16):
+    """[..., S] -> [..., S, d] sinusoidal embedding (MusicGen-style)."""
+    half = d // 2
+    freq = np.exp(-np.log(10000.0) * np.arange(half, dtype=np.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def activate(kind: str, x):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def cross_entropy(logits, labels, *, vocab_real: int, z_loss: float = 1e-4,
+                  ignore_index: int = -1):
+    """CE over a padded vocab; labels==ignore_index are masked out.
+
+    logits: [..., V_pad] (bf16 ok), labels: [...] int32.
+    """
+    vpad = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    if vpad > vocab_real:
+        neg = jnp.full((vpad - vocab_real,), -1e9, jnp.float32)
+        mask = jnp.concatenate([jnp.zeros((vocab_real,), jnp.float32), neg])
+        lf = lf + mask
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    safe_labels = jnp.clip(labels, 0, vpad - 1)
+    picked = jnp.take_along_axis(lf, safe_labels[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    valid = (labels != ignore_index)
+    nll = jnp.where(valid, nll, 0.0)
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    return jnp.sum(nll) / denom

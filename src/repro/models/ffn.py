@@ -1,0 +1,31 @@
+"""Dense feed-forward blocks (gated and plain)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import activate
+from repro.parallel.sharding import ParamDef, shard_act
+
+
+def ffn_schema(cfg: ArchConfig, d_ff: int | None = None) -> dict:
+    D = cfg.d_model
+    F = d_ff if d_ff is not None else cfg.d_ff
+    s = {
+        "w_up": ParamDef((D, F), ("embed", "mlp")),
+        "w_down": ParamDef((F, D), ("mlp", "embed")),
+    }
+    if cfg.gated_mlp:
+        s["w_gate"] = ParamDef((D, F), ("embed", "mlp"))
+    return s
+
+
+def ffn_apply(cfg: ArchConfig, p: dict, x):
+    h = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    if cfg.gated_mlp:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = activate(cfg.act, g) * h
+    else:
+        h = activate(cfg.act, h)
+    h = shard_act(h, ("batch", None, "mlp"))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])

@@ -1,0 +1,255 @@
+"""LM wrapper: embedding, stack, head, losses, prefill/decode, input specs."""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, RunConfig, ShapeConfig
+from repro.models import transformer as tfm
+from repro.models.common import (apply_norm, cross_entropy, norm_schema,
+                                 sinusoidal_pos, softcap)
+from repro.models.ffn import ffn_schema
+from repro.models.attention import attn_schema
+from repro.parallel.sharding import (
+    ParamDef, abstract_params, batch_spec, current_mesh, current_rules,
+    init_params, sharding_tree, spec_for, shard_act, tree_map_schema)
+
+
+# ---------------------------------------------------------------------------
+# Schema
+# ---------------------------------------------------------------------------
+
+def model_schema(cfg: ArchConfig) -> tuple[dict, dict]:
+    """-> (param schema, router-bias extras schema)."""
+    D, Vp = cfg.d_model, cfg.vocab_padded
+    stack, biases, _, _ = tfm.stack_schema_for_groups(cfg)
+    s: dict = {
+        "embed": {"tok": ParamDef((Vp, D), ("vocab", "embed"))},  # ~N(0, 1/sqrt(D))
+        "stack": stack,
+        "final_norm": norm_schema(cfg.norm, D),
+    }
+    if not cfg.tie_embeddings:
+        s["head"] = {"w": ParamDef((D, Vp), ("embed", "vocab"))}
+    if cfg.mtp:
+        s["mtp"] = {
+            "norm_h": norm_schema(cfg.norm, D),
+            "norm_e": norm_schema(cfg.norm, D),
+            "proj": ParamDef((2 * D, D), (None, "embed")),
+            "layer": tfm.layer_schema(cfg, "attn", "dense"),
+            "final_norm": norm_schema(cfg.norm, D),
+        }
+    return s, biases
+
+
+def init(cfg: ArchConfig, key):
+    ps, bs = model_schema(cfg)
+    return init_params(ps, key), init_params(bs, key)
+
+
+def abstract(cfg: ArchConfig):
+    ps, bs = model_schema(cfg)
+    return abstract_params(ps), abstract_params(bs)
+
+
+def param_shardings(cfg: ArchConfig, mesh, rules):
+    ps, bs = model_schema(cfg)
+    return sharding_tree(ps, mesh, rules), sharding_tree(bs, mesh, rules)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _embed(cfg: ArchConfig, params, tokens, positions, prefix=None):
+    x = params["embed"]["tok"][tokens]                      # gather [B,S,D]
+    if cfg.scale_embedding:
+        x = x * np.sqrt(cfg.d_model).astype(np.float32)
+    if cfg.pos == "sinusoidal":
+        x = x + sinusoidal_pos(positions, cfg.d_model, x.dtype)
+    if prefix is not None:
+        Pn = prefix.shape[1]
+        x = jnp.concatenate([prefix.astype(x.dtype), x[:, Pn:]], axis=1)
+    return shard_act(x, ("batch", None, None))
+
+
+def _head(cfg: ArchConfig, params, x):
+    w = params["head"]["w"] if not cfg.tie_embeddings else \
+        params["embed"]["tok"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    logits = shard_act(logits, ("batch", None, "vocab"))
+    return softcap(logits, cfg.final_logit_softcap)
+
+
+def forward(cfg: ArchConfig, rc: RunConfig, params, biases, batch,
+            *, make_cache_len: int = 0):
+    """batch: tokens [B,S] (+ cond / prefix embeds). Returns (logits, cache, aux)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+    cond = batch.get("cond")
+    prefix = batch.get("prefix")
+    x = _embed(cfg, params, tokens, positions, prefix)
+    x, cache, aux = tfm.stack_apply(cfg, rc, params["stack"], biases, x,
+                                    positions=positions, cond=cond,
+                                    make_cache_len=make_cache_len)
+    x = apply_norm(cfg.norm, x, params.get("final_norm"))
+    logits = _head(cfg, params, x)
+    return logits, cache, aux, x
+
+
+def loss_fn(cfg: ArchConfig, rc: RunConfig, params, biases, batch):
+    """Next-token CE (+ MoE aux + optional MTP). Returns (loss, metrics)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    logits, _, aux, h = forward(cfg, rc, params, biases, batch)
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.full((B, 1), -1, tokens.dtype)], axis=1)
+    if cfg.prefix_embeds:
+        # positions covered by patch embeddings carry no token labels
+        pmask = jnp.arange(S) < cfg.prefix_embeds
+        labels = jnp.where(pmask[None, :], -1, labels)
+    loss = cross_entropy(logits, labels, vocab_real=cfg.vocab)
+    metrics = {"ce_loss": loss}
+
+    aux_losses = [v["aux_loss"] for v in jax.tree.leaves(
+        aux, is_leaf=lambda n: isinstance(n, dict) and "aux_loss" in n)] \
+        if aux else []
+    if aux_losses:
+        al = sum(jnp.sum(a) for a in aux_losses)
+        loss = loss + al
+        metrics["moe_aux_loss"] = al
+
+    if cfg.mtp:
+        mtp_loss = jax.checkpoint(
+            lambda p, t, hh: _mtp_loss(cfg, rc, p, t, hh))(params, tokens, h)
+        loss = loss + 0.3 * mtp_loss
+        metrics["mtp_loss"] = mtp_loss
+
+    metrics["loss"] = loss
+    return loss, (metrics, aux)
+
+
+def _mtp_loss(cfg: ArchConfig, rc: RunConfig, params, tokens, h):
+    """Depth-1 multi-token prediction (predict t+2 from trunk state at t)."""
+    m = params["mtp"]
+    B, S = tokens.shape
+    e = params["embed"]["tok"][tokens[:, 1:]]              # embed of t+1
+    e = shard_act(e, ("batch", None, None))
+    hh = apply_norm(cfg.norm, h[:, :-1], m["norm_h"])
+    ee = apply_norm(cfg.norm, e, m["norm_e"])
+    z = jnp.concatenate([hh, ee], axis=-1) @ m["proj"]
+    z, _, _ = tfm.layer_apply(cfg, rc, m["layer"], None, z, kind="attn",
+                              ffn="dense", positions=jnp.arange(S - 1),
+                              cond=None, make_cache_len=0)
+    z = apply_norm(cfg.norm, z, m["final_norm"])
+    logits = _head(cfg, params, z)
+    labels = jnp.concatenate(
+        [tokens[:, 2:], jnp.full((B, 1), -1, tokens.dtype)], axis=1)
+    return cross_entropy(logits, labels, vocab_real=cfg.vocab)
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ArchConfig, rc: RunConfig, params, biases, batch, max_len: int):
+    """-> (cache, last_logits)."""
+    logits, cache, _, _ = forward(cfg, rc, params, biases, batch,
+                                  make_cache_len=max_len)
+    return cache, logits[:, -1]
+
+
+def decode_step(cfg: ArchConfig, rc: RunConfig, params, biases, cache,
+                token, pos):
+    """token: [B,1] int32, pos: scalar int32 -> (logits [B,Vp], cache)."""
+    pvec = jnp.zeros((1,), jnp.int32) + pos
+    x = _embed(cfg, params, token, pvec)
+    x, cache = tfm.stack_decode(cfg, rc, params["stack"], biases, cache, x, pos)
+    x = apply_norm(cfg.norm, x, params.get("final_norm"))
+    logits = _head(cfg, params, x)
+    return logits[:, 0], cache
+
+
+# ---------------------------------------------------------------------------
+# Input specs (dry-run stand-ins) and cache
+# ---------------------------------------------------------------------------
+
+def cache_abstract(cfg: ArchConfig, batch: int, max_len: int):
+    return abstract_params(tfm.cache_schema(cfg, batch, max_len))
+
+
+def cache_shardings(cfg: ArchConfig, batch: int, max_len: int, mesh, rules):
+    return sharding_tree(tfm.cache_schema(cfg, batch, max_len), mesh, rules)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    return init_params(tfm.cache_schema(cfg, batch, max_len),
+                       jax.random.PRNGKey(0))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh=None, rules=None):
+    """ShapeDtypeStructs (with shardings when a mesh is given) for batch inputs."""
+    B, S = shape.global_batch, shape.seq_len
+
+    def sds(shp, dtype, dims):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(shp, dtype)
+        spec = spec_for(shp, dims, mesh, rules)
+        return jax.ShapeDtypeStruct(shp, dtype, sharding=NamedSharding(mesh, spec))
+
+    if shape.kind == "decode":
+        batch = {"tokens": sds((B, 1), jnp.int32, ("batch", None))}
+    else:
+        batch = {"tokens": sds((B, S), jnp.int32, ("batch", None))}
+        if cfg.cross_attn:
+            batch["cond"] = sds((B, cfg.cond_len, cfg.d_model), jnp.bfloat16,
+                                ("batch", None, None))
+        if cfg.prefix_embeds:
+            batch["prefix"] = sds((B, cfg.prefix_embeds, cfg.d_model),
+                                  jnp.bfloat16, ("batch", None, None))
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# Analytic param counts (MODEL_FLOPS = 6 * N * D uses non-embedding params)
+# ---------------------------------------------------------------------------
+
+def count_params_analytic(cfg: ArchConfig, active_only: bool = False) -> int:
+    ps, _ = model_schema(cfg)
+    total = 0
+    moe_frac = 1.0
+    if cfg.moe is not None and active_only:
+        moe_frac = cfg.moe.top_k / cfg.moe.n_experts
+
+    def add(path, pd: ParamDef):
+        nonlocal total
+        n = int(np.prod(pd.shape))
+        sp = "/".join(map(str, path))
+        if "embed" in sp or (not cfg.tie_embeddings and sp.startswith("head")):
+            return None                       # embeddings excluded from 6ND
+        if "/moe/" in f"/{sp}/" and "shared" not in sp and "router" not in sp:
+            n = int(n * moe_frac)
+        total += n
+        return None
+
+    tree_map_schema(add, ps)
+    return total
+
+
+def count_params_total(cfg: ArchConfig) -> int:
+    ps, _ = model_schema(cfg)
+    total = 0
+
+    def add(path, pd: ParamDef):
+        nonlocal total
+        total += int(np.prod(pd.shape))
+        return None
+
+    tree_map_schema(add, ps)
+    return total

@@ -1,0 +1,111 @@
+"""Griffin RG-LRU recurrent block [arXiv:2402.19427] (RecurrentGemma).
+
+Real-gated linear recurrent unit:
+    r_t = sigmoid(W_r u_t), i_t = sigmoid(W_i u_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+Training/prefill uses ``jax.lax.associative_scan`` over the sequence; decode is one
+recurrence step (O(1) state — with the bounded local-attention window this makes
+recurrentgemma the other ``long_500k``-eligible arch).
+
+Gates use block-diagonal linears with n_heads blocks (as in the DeepMind impl).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallel.sharding import ParamDef, shard_act
+from repro.models.ssm import _causal_conv
+
+
+def rglru_schema(cfg: ArchConfig) -> dict:
+    g = cfg.rglru
+    D = cfg.d_model
+    W = g.lru_width or D
+    nb = cfg.n_heads
+    bw = W // nb
+    return {
+        "w_in": ParamDef((D, W), ("embed", "state")),
+        "w_gate_branch": ParamDef((D, W), ("embed", "state")),
+        "conv": ParamDef((g.conv_width, W), (None, "state"), scale=0.5),
+        "w_r": ParamDef((nb, bw, bw), (None, None, None)),
+        "b_r": ParamDef((W,), (None,), init="zeros"),
+        "w_i": ParamDef((nb, bw, bw), (None, None, None)),
+        "b_i": ParamDef((W,), (None,), init="zeros"),
+        "lam": ParamDef((W,), (None,), init="ones", dtype="float32"),
+        "w_out": ParamDef((W, D), ("state", "embed")),
+    }
+
+
+def _block_linear(u, w, b):
+    """u: [...,W], w: [nb,bw,bw] -> [...,W]."""
+    nb, bw, _ = w.shape
+    shp = u.shape
+    ub = u.reshape(*shp[:-1], nb, bw)
+    yb = jnp.einsum("...nk,nkj->...nj", ub, w)
+    return yb.reshape(*shp) + b
+
+
+def _gates(cfg: ArchConfig, p, u):
+    g = cfg.rglru
+    r = jax.nn.sigmoid(_block_linear(u, p["w_r"], p["b_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_linear(u, p["w_i"], p["b_i"]).astype(jnp.float32))
+    log_a = -g.c * jax.nn.softplus(p["lam"]) * r          # [...,W] fp32, negative
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * \
+        (i * u.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_apply(cfg: ArchConfig, p: dict, x, *, make_cache: bool = False):
+    """x: [B,L,D] -> (y, cache|None)."""
+    B, L, D = x.shape
+    u0 = jnp.einsum("bld,dw->blw", x, p["w_in"])
+    gate = jax.nn.gelu(jnp.einsum("bld,dw->blw", x, p["w_gate_branch"]))
+    u = _causal_conv(u0, p["conv"])
+    u = shard_act(u, ("batch", None, "state"))
+
+    a, b = _gates(cfg, p, u)                               # [B,L,W] fp32
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (hh.astype(x.dtype) * gate)
+    out = jnp.einsum("blw,wd->bld", y, p["w_out"])
+
+    cache = None
+    if make_cache:
+        K = cfg.rglru.conv_width
+        cache = {"conv": u0[:, -(K - 1):] if K > 1 else u0[:, :0],
+                 "state": hh[:, -1]}                        # [B,W] fp32
+    return out, cache
+
+
+def rglru_cache_def(cfg: ArchConfig, batch: int) -> dict:
+    g = cfg.rglru
+    W = g.lru_width or cfg.d_model
+    K = g.conv_width
+    return {
+        "conv": ParamDef((batch, K - 1, W), ("batch", None, "state"), init="zeros"),
+        "state": ParamDef((batch, W), ("batch", "state"), init="zeros",
+                          dtype="float32"),
+    }
+
+
+def rglru_decode(cfg: ArchConfig, p: dict, x1, cache: dict, pos):
+    B, _, D = x1.shape
+    x0 = x1[:, 0]
+    u0 = x0 @ p["w_in"]
+    gate = jax.nn.gelu(x0 @ p["w_gate_branch"])
+    seq = jnp.concatenate([cache["conv"], u0[:, None]], axis=1)
+    u = jnp.einsum("bkw,kw->bw", seq, p["conv"])
+    a, b = _gates(cfg, p, u)
+    h = a * cache["state"] + b
+    y = (h.astype(x1.dtype) * gate)
+    out = (y @ p["w_out"])[:, None, :]
+    return out, {"conv": seq[:, 1:], "state": h}

@@ -1,0 +1,237 @@
+"""Mamba-2 block via the SSD (state-space duality) chunked algorithm
+[arXiv:2405.21060].
+
+Training/prefill uses the chunked form: intra-chunk quadratic attention-like term +
+inter-chunk state recurrence (sequential scan over chunks). Decode keeps an O(1)
+recurrent state per layer — which is why mamba2 is the arch that makes the
+``long_500k`` cell feasible at all.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.common import rmsnorm
+from repro.parallel.sharding import ParamDef, shard_act
+
+
+def ssm_schema(cfg: ArchConfig) -> dict:
+    s = cfg.ssm
+    D = cfg.d_model
+    Din = s.d_inner(D)
+    H = s.n_heads(D)
+    N = s.d_state
+    G = s.n_groups
+    K = s.conv_width
+    return {
+        "w_z": ParamDef((D, Din), ("embed", "state")),
+        "w_x": ParamDef((D, Din), ("embed", "state")),
+        "w_B": ParamDef((D, G * N), ("embed", None)),
+        "w_C": ParamDef((D, G * N), ("embed", None)),
+        "w_dt": ParamDef((D, H), ("embed", "heads")),
+        "conv_x": ParamDef((K, Din), (None, "state"), scale=0.5),
+        "conv_B": ParamDef((K, G * N), (None, None), scale=0.5),
+        "conv_C": ParamDef((K, G * N), (None, None), scale=0.5),
+        "A_log": ParamDef((H,), ("heads",), init="zeros"),
+        "D": ParamDef((H,), ("heads",), init="ones"),
+        "dt_bias": ParamDef((H,), ("heads",), init="zeros"),
+        "gn": ParamDef((Din,), ("state",), init="zeros"),
+        "w_out": ParamDef((Din, D), ("state", "embed")),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv via shifted adds. x: [B,L,C], w: [K,C]."""
+    K = w.shape[0]
+    y = x * w[K - 1]
+    for i in range(1, K):
+        y = y + jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i] * w[K - 1 - i]
+    return y
+
+
+def _segsum(a):
+    """a: [..., Q]. Lower-triangular cumulative sums: out[i,j] = sum_{j<t<=i} a_t."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = np.tril(np.ones((Q, Q), bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """SSD over chunks — sequential scan over the chunk dimension with a rematted
+    body, so only one [B,H,Q,Q] decay tile is ever alive (the all-chunks-vectorized
+    form materializes [B,nc,H,Q,Q] and dominated train-step memory).
+
+    x: [B,L,H,P], dt: [B,L,H] (positive), A: [H] (negative), Bm/Cm: [B,L,G,N].
+    Returns y: [B,L,H,P].
+    """
+    Bz, L, H, Pd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    rep = H // G
+
+    # [nc, B, Q, ...] chunked views (scan over leading dim)
+    xc = jnp.moveaxis(x.reshape(Bz, nc, chunk, H, Pd), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(Bz, nc, chunk, H), 1, 0)
+    Bc = jnp.moveaxis(Bm.reshape(Bz, nc, chunk, G, N), 1, 0)
+    Cc = jnp.moveaxis(Cm.reshape(Bz, nc, chunk, G, N), 1, 0)
+
+    @jax.checkpoint
+    def body(S_prev, inp):
+        xq, dtq, Bq, Cq = inp                       # [B,Q,H,P] etc.
+        Bh = jnp.repeat(Bq, rep, axis=2)            # [B,Q,H,N]
+        Ch = jnp.repeat(Cq, rep, axis=2)
+        a = (dtq * A).astype(jnp.float32)           # [B,Q,H], negative
+        a_t = jnp.moveaxis(a, -1, -2)               # [B,H,Q]
+        acs = jnp.cumsum(a_t, axis=-1)
+        xdt = (xq * dtq[..., None]).astype(jnp.float32)
+
+        Ldec = jnp.exp(_segsum(a_t))                # [B,H,Q,Q]
+        scores = jnp.einsum("bqhn,bkhn->bhqk", Ch, Bh,
+                            preferred_element_type=jnp.float32)
+        y_diag = jnp.einsum("bhqk,bhqk,bkhp->bqhp", scores, Ldec, xdt)
+
+        dec_to_end = jnp.exp(acs[..., -1:] - acs)   # [B,H,Q]
+        S_c = jnp.einsum("bkhn,bhk,bkhp->bhnp", Bh, dec_to_end, xdt)
+
+        dec_from_start = jnp.exp(acs)               # [B,H,Q]
+        y_off = jnp.einsum("bqhn,bhq,bhnp->bqhp",
+                           Ch.astype(jnp.float32), dec_from_start, S_prev)
+
+        chunk_decay = jnp.exp(acs[..., -1])         # [B,H]
+        S = S_prev * chunk_decay[..., None, None] + S_c
+        return S, (y_diag + y_off).astype(x.dtype)
+
+    S0 = jnp.zeros((Bz, H, N, Pd), jnp.float32)
+    _, yc = jax.lax.scan(body, S0, (xc, dtc, Bc, Cc))
+    return jnp.moveaxis(yc, 0, 1).reshape(Bz, L, H, Pd)
+
+
+def ssm_apply(cfg: ArchConfig, p: dict, x, *, make_cache: bool = False):
+    """x: [B,L,D] -> (y, cache|None). Training / prefill path."""
+    s = cfg.ssm
+    B, L, D = x.shape
+    H = s.n_heads(D)
+    Pd = s.head_dim
+    G, N = s.n_groups, s.d_state
+
+    z = jnp.einsum("bld,de->ble", x, p["w_z"])
+    xin = jnp.einsum("bld,de->ble", x, p["w_x"])
+    Bm = jnp.einsum("bld,de->ble", x, p["w_B"])
+    Cm = jnp.einsum("bld,de->ble", x, p["w_C"])
+    dt = jnp.einsum("bld,dh->blh", x, p["w_dt"])
+
+    xin = jax.nn.silu(_causal_conv(xin, p["conv_x"]))
+    Bm = jax.nn.silu(_causal_conv(Bm, p["conv_B"]))
+    Cm = jax.nn.silu(_causal_conv(Cm, p["conv_C"]))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xh = shard_act(xin.reshape(B, L, H, Pd), ("batch", None, "heads", None))
+    Bh = Bm.reshape(B, L, G, N)
+    Ch = Cm.reshape(B, L, G, N)
+
+    chunk = min(s.chunk, L)
+    pad = (-L) % chunk
+    if pad:                    # causal: trailing pad cannot affect y[:, :L]
+        xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bh_p = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Ch_p = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y = ssd_chunked(xh_p, dt_p, A, Bh_p, Ch_p, chunk)[:, :L]
+    else:
+        y = ssd_chunked(xh, dt, A, Bh, Ch, chunk)
+    y = y + xh * p["D"].astype(xh.dtype)[None, None, :, None]
+    y = y.reshape(B, L, H * Pd)
+    y = rmsnorm(y * jax.nn.silu(z), p["gn"])
+    out = jnp.einsum("ble,ed->bld", y, p["w_out"])
+
+    cache = None
+    if make_cache:
+        K = s.conv_width
+        # final SSM state: recompute from the scan end (cheap: reuse chunked pieces)
+        cache = {
+            "conv_x": _tail(xin_pre := jnp.einsum("bld,de->ble", x, p["w_x"]), K - 1),
+            "conv_B": _tail(jnp.einsum("bld,de->ble", x, p["w_B"]), K - 1),
+            "conv_C": _tail(jnp.einsum("bld,de->ble", x, p["w_C"]), K - 1),
+            "state": _final_state(xh, dt, A, Bh),
+        }
+    return out, cache
+
+
+def _tail(x, k):
+    return x[:, -k:] if k else x[:, :0]
+
+
+def _final_state(xh, dt, A, Bh):
+    """Exact final SSM state h_L: [B,H,N,P] (sequential over chunk ends)."""
+    B, L, H, Pd = xh.shape
+    G, N = Bh.shape[2], Bh.shape[3]
+    rep = H // G
+    Bfull = jnp.repeat(Bh, rep, axis=2)                  # [B,L,H,N]
+    a = (dt * A).astype(jnp.float32)                     # [B,L,H]
+    acs = jnp.cumsum(a, axis=1)
+    dec = jnp.exp(acs[:, -1:, :] - acs)                  # decay from t to end
+    xdt = (xh * dt[..., None]).astype(jnp.float32)
+    S = jnp.einsum("blhn,blh,blhp->bhnp", Bfull.astype(jnp.float32), dec, xdt)
+    return S
+
+
+def ssm_cache_def(cfg: ArchConfig, batch: int) -> dict:
+    s = cfg.ssm
+    D = cfg.d_model
+    Din, H, N, G, K = (s.d_inner(D), s.n_heads(D), s.d_state, s.n_groups,
+                       s.conv_width)
+    return {
+        "conv_x": ParamDef((batch, K - 1, Din), ("batch", None, "state"),
+                           init="zeros"),
+        "conv_B": ParamDef((batch, K - 1, G * N), ("batch", None, None),
+                           init="zeros"),
+        "conv_C": ParamDef((batch, K - 1, G * N), ("batch", None, None),
+                           init="zeros"),
+        "state": ParamDef((batch, H, N, s.head_dim), ("batch", "heads", None, None),
+                          init="zeros", dtype="float32"),
+    }
+
+
+def ssm_decode(cfg: ArchConfig, p: dict, x1, cache: dict, pos):
+    """Single-token recurrent step. x1: [B,1,D]."""
+    s = cfg.ssm
+    B, _, D = x1.shape
+    H, Pd, G, N, K = (s.n_heads(D), s.head_dim, s.n_groups, s.d_state,
+                      s.conv_width)
+    x0 = x1[:, 0]
+    z = x0 @ p["w_z"]
+    xin = x0 @ p["w_x"]
+    Bm = x0 @ p["w_B"]
+    Cm = x0 @ p["w_C"]
+    dt = x0 @ p["w_dt"]
+
+    def conv_step(prev, cur, w):
+        seq = jnp.concatenate([prev, cur[:, None]], axis=1)   # [B,K,C]
+        out = jnp.einsum("bkc,kc->bc", seq, w)
+        return jax.nn.silu(out), seq[:, 1:]
+
+    xin, cx = conv_step(cache["conv_x"], xin, p["conv_x"])
+    Bm, cB = conv_step(cache["conv_B"], Bm, p["conv_B"])
+    Cm, cC = conv_step(cache["conv_C"], Cm, p["conv_C"])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(B, H, Pd).astype(jnp.float32)
+    Bh = jnp.repeat(Bm.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cm.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+
+    dA = jnp.exp(dt * A)                                      # [B,H]
+    h = cache["state"] * dA[..., None, None] + \
+        jnp.einsum("bhn,bh,bhp->bhnp", Bh, dt, xh)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, h) + xh * p["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(B, H * Pd).astype(x1.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["gn"])
+    out = (y @ p["w_out"])[:, None, :]
+    return out, {"conv_x": cx, "conv_B": cB, "conv_C": cC, "state": h}

@@ -1,0 +1,357 @@
+"""Composable decoder stack.
+
+Layers are grouped into *units* (the arch's repeating pattern); consecutive identical
+units are stacked and run under ``lax.scan`` (bounded compile time at 61 layers), with
+per-unit ``jax.checkpoint`` (remat). Heterogeneous prefixes/suffixes (DeepSeek's 3 dense
+layers, RecurrentGemma's trailing (rglru, rglru)) become separate scan groups / an
+unrolled tail.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RunConfig
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import apply_norm, norm_schema
+from repro.parallel.sharding import ParamDef, shard_act, tree_map_schema
+
+
+# ---------------------------------------------------------------------------
+# Layer planning
+# ---------------------------------------------------------------------------
+
+def ffn_kind(cfg: ArchConfig, layer_idx: int) -> str:
+    if cfg.moe is not None:
+        return "moe" if layer_idx >= cfg.moe.start_layer else (
+            "dense" if cfg.d_ff else "none")
+    if cfg.pattern[layer_idx % len(cfg.pattern)] == "ssm":
+        return "none"
+    return "dense" if cfg.d_ff else "none"
+
+
+def plan_layers(cfg: ArchConfig):
+    """-> (groups: list[(unit_sig, count)], tail: unit_sig|None).
+
+    unit_sig = tuple of (kind, ffn) per layer in the unit.
+    """
+    n = cfg.n_layers
+    u = len(cfg.pattern)
+    kinds = cfg.layer_kinds
+    ffns = [ffn_kind(cfg, i) for i in range(n)]
+    full = n - (n % u)
+    units = [tuple(zip(kinds[i:i + u], ffns[i:i + u])) for i in range(0, full, u)]
+    tail = tuple(zip(kinds[full:], ffns[full:])) if n % u else None
+    groups: list[tuple[tuple, int]] = []
+    for sig in units:
+        if groups and groups[-1][0] == sig:
+            groups[-1] = (sig, groups[-1][1] + 1)
+        else:
+            groups.append((sig, 1))
+    return groups, tail
+
+
+# ---------------------------------------------------------------------------
+# Schemas
+# ---------------------------------------------------------------------------
+
+def layer_schema(cfg: ArchConfig, kind: str, ffn: str) -> dict:
+    D = cfg.d_model
+    s: dict = {"norm1": norm_schema(cfg.norm, D)}
+    if kind in ("attn", "local"):
+        s["attn"] = attn_mod.attn_schema(cfg, kind)
+        if cfg.cross_attn:
+            s["norm_x"] = norm_schema(cfg.norm, D)
+            s["cross"] = attn_mod.attn_schema(cfg, "cross")
+    elif kind == "ssm":
+        s["ssm"] = ssm_mod.ssm_schema(cfg)
+    elif kind == "rglru":
+        s["rec"] = rglru_mod.rglru_schema(cfg)
+    else:
+        raise ValueError(kind)
+    if cfg.post_block_norm:
+        s["post1"] = norm_schema(cfg.norm, D)
+    if ffn != "none":
+        s["norm2"] = norm_schema(cfg.norm, D)
+        if ffn == "moe":
+            s["moe"] = moe_mod.moe_schema(cfg)
+        else:
+            s["ffn"] = ffn_mod.ffn_schema(cfg)
+        if cfg.post_block_norm:
+            s["post2"] = norm_schema(cfg.norm, D)
+    return s
+
+
+def unit_schema(cfg: ArchConfig, sig) -> dict:
+    return {f"l{i}": layer_schema(cfg, k, f) for i, (k, f) in enumerate(sig)}
+
+
+def _stack_schema(schema, n: int):
+    return tree_map_schema(
+        lambda path, pd: ParamDef((n,) + pd.shape, ("layers",) + pd.dims,
+                                  init=pd.init, scale=pd.scale, dtype=pd.dtype),
+        schema)
+
+
+def unit_bias_schema(cfg: ArchConfig, sig) -> dict:
+    """Router-bias extras (aux-loss-free routing state), mirroring moe layers."""
+    out = {}
+    for i, (k, f) in enumerate(sig):
+        if f == "moe":
+            out[f"l{i}"] = moe_mod.moe_bias_def(cfg)
+    return out
+
+
+def stack_schema_for_groups(cfg: ArchConfig):
+    groups, tail = plan_layers(cfg)
+    params = {}
+    biases = {}
+    for gi, (sig, cnt) in enumerate(groups):
+        params[f"g{gi}"] = _stack_schema(unit_schema(cfg, sig), cnt)
+        b = unit_bias_schema(cfg, sig)
+        if b:
+            biases[f"g{gi}"] = _stack_schema(b, cnt)
+    if tail is not None:
+        params["tail"] = unit_schema(cfg, tail)
+        b = unit_bias_schema(cfg, tail)
+        if b:
+            biases["tail"] = b
+    return params, biases, groups, tail
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def _maybe_post(cfg, p, key, y):
+    if cfg.post_block_norm:
+        return apply_norm(cfg.norm, y, p.get(key))
+    return y
+
+
+def layer_apply(cfg: ArchConfig, rc: RunConfig, p: dict, bias, x, *,
+                kind: str, ffn: str, positions, cond, make_cache_len: int):
+    """Full-sequence path (train / prefill). Returns (x, cache, aux)."""
+    cache: dict = {}
+    aux: dict = {}
+    h = apply_norm(cfg.norm, x, p.get("norm1"))
+    if kind in ("attn", "local"):
+        y, c = attn_mod.gqa_or_mla_apply(
+            cfg, p["attn"], h, kind=kind, positions=positions,
+            impl=rc.attention_impl_for(h.shape[1]), chunk=rc.attn_chunk,
+            make_cache=make_cache_len)
+        if c:
+            cache["attn"] = c
+    elif kind == "ssm":
+        y, c = ssm_mod.ssm_apply(cfg, p["ssm"], h, make_cache=bool(make_cache_len))
+        if c:
+            cache["ssm"] = c
+    elif kind == "rglru":
+        y, c = rglru_mod.rglru_apply(cfg, p["rec"], h,
+                                     make_cache=bool(make_cache_len))
+        if c:
+            cache["rec"] = c
+    else:
+        raise ValueError(kind)
+    x = x + _maybe_post(cfg, p, "post1", y)
+
+    if cfg.cross_attn and kind in ("attn", "local"):
+        hx = apply_norm(cfg.norm, x, p.get("norm_x"))
+        y, c = attn_mod.gqa_apply(cfg, p["cross"], hx, kind="cross",
+                                  positions=positions, impl="masked",
+                                  chunk=rc.attn_chunk, cond=cond,
+                                  make_cache=make_cache_len)
+        if c:
+            cache["cross"] = c
+        x = x + y
+
+    if ffn != "none":
+        h = apply_norm(cfg.norm, x, p.get("norm2"))
+        if ffn == "moe":
+            y, moe_aux = moe_mod.moe_apply(cfg, p["moe"], h, bias,
+                                           compress_a2a=rc.compress_moe_a2a)
+            aux.update(moe_aux)
+        else:
+            y = ffn_mod.ffn_apply(cfg, p["ffn"], h)
+        x = x + _maybe_post(cfg, p, "post2", y)
+    x = shard_act(x, ("batch", None, None))
+    return x, cache, aux
+
+
+def layer_decode(cfg: ArchConfig, rc: RunConfig, p: dict, bias, cache: dict,
+                 x1, pos, *, kind: str, ffn: str):
+    """Single-token path. Returns (x1, new_cache)."""
+    new_cache: dict = {}
+    h = apply_norm(cfg.norm, x1, p.get("norm1"))
+    if kind in ("attn", "local"):
+        y, c = attn_mod.gqa_or_mla_decode(cfg, p["attn"], h, cache["attn"], pos,
+                                          kind=kind)
+        new_cache["attn"] = c
+    elif kind == "ssm":
+        y, c = ssm_mod.ssm_decode(cfg, p["ssm"], h, cache["ssm"], pos)
+        new_cache["ssm"] = c
+    elif kind == "rglru":
+        y, c = rglru_mod.rglru_decode(cfg, p["rec"], h, cache["rec"], pos)
+        new_cache["rec"] = c
+    x1 = x1 + _maybe_post(cfg, p, "post1", y)
+
+    if cfg.cross_attn and kind in ("attn", "local"):
+        hx = apply_norm(cfg.norm, x1, p.get("norm_x"))
+        y, c = attn_mod.gqa_decode(cfg, p["cross"], hx, cache["cross"], pos,
+                                   kind="cross")
+        new_cache["cross"] = c
+        x1 = x1 + y
+
+    if ffn != "none":
+        h = apply_norm(cfg.norm, x1, p.get("norm2"))
+        if ffn == "moe":
+            y, _ = moe_mod.moe_apply(cfg, p["moe"], h, bias,
+                                     compress_a2a=rc.compress_moe_a2a)
+        else:
+            y = ffn_mod.ffn_apply(cfg, p["ffn"], h)
+        x1 = x1 + _maybe_post(cfg, p, "post2", y)
+    return x1, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Stack application
+# ---------------------------------------------------------------------------
+
+def _unit_fns(cfg, rc, sig, positions, cond, make_cache_len):
+    def unit_fn(x, unit_p, unit_b):
+        caches, auxs = {}, {}
+        for i, (k, f) in enumerate(sig):
+            b = unit_b.get(f"l{i}") if unit_b else None
+            x, c, a = layer_apply(cfg, rc, unit_p[f"l{i}"], b, x, kind=k, ffn=f,
+                                  positions=positions, cond=cond,
+                                  make_cache_len=make_cache_len)
+            if c:
+                caches[f"l{i}"] = c
+            if a:
+                auxs[f"l{i}"] = a
+        return x, caches, auxs
+    if rc.remat == "full":
+        unit_fn = jax.checkpoint(unit_fn)
+    elif rc.remat == "dots":
+        unit_fn = jax.checkpoint(
+            unit_fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return unit_fn
+
+
+def stack_apply(cfg: ArchConfig, rc: RunConfig, params: dict, biases: dict, x, *,
+                positions, cond=None, make_cache_len: int = 0):
+    """Run all groups + tail. Returns (x, cache_tree, aux_tree)."""
+    groups, tail = plan_layers(cfg)
+    caches, auxs = {}, {}
+    for gi, (sig, cnt) in enumerate(groups):
+        key = f"g{gi}"
+        unit_fn = _unit_fns(cfg, rc, sig, positions, cond, make_cache_len)
+        bstack = biases.get(key)
+
+        def body(carry, per):
+            up, ub = per
+            y, c, a = unit_fn(carry, up, ub)
+            return y, (c, a)
+
+        if bstack is not None:
+            x, (c, a) = jax.lax.scan(body, x, (params[key], bstack))
+        else:
+            def body0(carry, up):
+                y, c, a = unit_fn(carry, up, None)
+                return y, (c, a)
+            x, (c, a) = jax.lax.scan(body0, x, params[key])
+        if jax.tree_util.tree_leaves(c):
+            caches[key] = c
+        if jax.tree_util.tree_leaves(a):
+            auxs[key] = a
+    if tail is not None:
+        unit_fn = _unit_fns(cfg, rc, tail, positions, cond, make_cache_len)
+        x, c, a = unit_fn(x, params["tail"], biases.get("tail"))
+        if jax.tree_util.tree_leaves(c):
+            caches["tail"] = c
+        if jax.tree_util.tree_leaves(a):
+            auxs["tail"] = a
+    return x, caches, auxs
+
+
+def stack_decode(cfg: ArchConfig, rc: RunConfig, params: dict, biases: dict,
+                 cache: dict, x1, pos):
+    groups, tail = plan_layers(cfg)
+    new_cache = {}
+    for gi, (sig, cnt) in enumerate(groups):
+        key = f"g{gi}"
+
+        def unit_dec(x, up, ub, uc):
+            ncs = {}
+            for i, (k, f) in enumerate(sig):
+                b = ub.get(f"l{i}") if ub else None
+                x, nc = layer_decode(cfg, rc, up[f"l{i}"], b,
+                                     uc[f"l{i}"] if f"l{i}" in uc else {},
+                                     x, pos, kind=k, ffn=f)
+                if nc:
+                    ncs[f"l{i}"] = nc
+            return x, ncs
+
+        bstack = biases.get(key)
+        if bstack is not None:
+            def body(carry, per):
+                up, ub, uc = per
+                return unit_dec(carry, up, ub, uc)
+            x1, nc = jax.lax.scan(body, x1, (params[key], bstack, cache[key]))
+        else:
+            def body0(carry, per):
+                up, uc = per
+                return unit_dec(carry, up, None, uc)
+            x1, nc = jax.lax.scan(body0, x1, (params[key], cache[key]))
+        new_cache[key] = nc
+    if tail is not None:
+        ncs = {}
+        x = x1
+        for i, (k, f) in enumerate(tail):
+            b = (biases.get("tail") or {}).get(f"l{i}")
+            x, nc = layer_decode(cfg, rc, params["tail"][f"l{i}"], b,
+                                 cache["tail"][f"l{i}"], x, pos, kind=k, ffn=f)
+            if nc:
+                ncs[f"l{i}"] = nc
+        x1 = x
+        new_cache["tail"] = ncs
+    return x1, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cache defs
+# ---------------------------------------------------------------------------
+
+def cache_schema(cfg: ArchConfig, batch: int, max_len: int):
+    """ParamDef tree matching the cache produced by prefill / consumed by decode."""
+    groups, tail = plan_layers(cfg)
+    out = {}
+
+    def unit_cache(sig):
+        u = {}
+        for i, (k, f) in enumerate(sig):
+            c = {}
+            if k in ("attn", "local"):
+                c["attn"] = attn_mod.cache_def(cfg, k, batch, max_len)
+                if cfg.cross_attn:
+                    c["cross"] = attn_mod.cache_def(cfg, "cross", batch, max_len)
+            elif k == "ssm":
+                c["ssm"] = ssm_mod.ssm_cache_def(cfg, batch)
+            elif k == "rglru":
+                c["rec"] = rglru_mod.rglru_cache_def(cfg, batch)
+            if c:
+                u[f"l{i}"] = c
+        return u
+
+    for gi, (sig, cnt) in enumerate(groups):
+        out[f"g{gi}"] = _stack_schema(unit_cache(sig), cnt)
+    if tail is not None:
+        out["tail"] = unit_cache(tail)
+    return out

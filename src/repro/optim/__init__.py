@@ -1,0 +1,2 @@
+from repro.optim.optimizers import opt_init, opt_update, apply_updates
+from repro.optim.schedule import warmup_cosine

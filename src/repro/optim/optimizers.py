@@ -1,0 +1,164 @@
+"""Optimizers: AdamW, SGD+momentum, Adafactor — per-tensor or bucketed.
+
+Bucketed mode (core/buckets.py) is the paper's output-buffering analogue: the whole
+gradient pytree is flattened into a few large fp32 buffers and the optimizer update is
+a handful of fused elementwise ops instead of hundreds of tiny ones. Adafactor keeps
+per-tensor states (factored second moments need the tensor shape) and is used for the
+671B config where Adam-class state does not fit HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import buckets as bk
+
+
+# ---------------------------------------------------------------------------
+# Per-tensor kernels (operate on one array; mapped or fused over buckets)
+# ---------------------------------------------------------------------------
+
+def _adamw_update(g, m, v, p, *, lr, b1, b2, eps, wd, step):
+    gf = g.astype(jnp.float32)
+    m = b1 * m + (1 - b1) * gf
+    v = b2 * v + (1 - b2) * jnp.square(gf)
+    mh = m / (1 - b1 ** step)
+    vh = v / (1 - b2 ** step)
+    upd = -lr * (mh / (jnp.sqrt(vh) + eps) + wd * p.astype(jnp.float32))
+    return upd, m, v
+
+
+def _sgdm_update(g, m, p, *, lr, beta, wd):
+    gf = g.astype(jnp.float32) + wd * p.astype(jnp.float32)
+    m = beta * m + gf
+    return -lr * m, m
+
+
+def _adafactor_update(g, state, p, *, lr, b2, eps, wd, step):
+    gf = g.astype(jnp.float32)
+    g2 = jnp.square(gf) + 1e-30
+    decay = 1.0 - (step ** -0.8)
+    if gf.ndim >= 2:
+        vr = decay * state["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+        vc = decay * state["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+        rfac = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+        vhat = rfac[..., None] * vc[..., None, :]
+        new = {"vr": vr, "vc": vc}
+    else:
+        v = decay * state["v"] + (1 - decay) * g2
+        vhat = v
+        new = {"v": v}
+    u = gf / jnp.sqrt(vhat + eps)
+    # update clipping (Shazeer & Stern)
+    rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+    u = u / jnp.maximum(1.0, rms)
+    upd = -lr * (u + wd * p.astype(jnp.float32))
+    return upd, new
+
+
+# ---------------------------------------------------------------------------
+# Public optimizer API
+# ---------------------------------------------------------------------------
+
+def opt_init(name: str, params, *, bucketed: bool = False,
+             bucket_bytes: int = 1 << 28, pad_multiple: int = 1):
+    """Returns opt state pytree. For bucketed adamw/sgdm, states are buckets."""
+    if name == "adafactor":
+        def st(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"per": jax.tree.map(st, params)}
+    if bucketed:
+        plan = bk.make_plan(params, bucket_bytes, pad_multiple)
+        zeros = bk.zeros_like_buckets(plan)
+        if name == "adamw":
+            return {"m": zeros, "v": bk.zeros_like_buckets(plan)}
+        if name == "sgdm":
+            return {"m": zeros}
+        raise ValueError(name)
+    if name == "adamw":
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+    if name == "sgdm":
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params)}
+    raise ValueError(name)
+
+
+def opt_update(kind: str, opt_state, grads, params, *, lr, wd: float = 0.1,
+               step, plan: bk.BucketPlan | None = None,
+               grads_are_buckets: bool = False):
+    """-> (updates_tree_or_buckets, new_opt_state).
+
+    If ``plan`` is given and the optimizer is bucketed, grads may be passed either as
+    a tree (flattened here) or as ready buckets (``grads_are_buckets``) — the latter is
+    how the explicit-sync path avoids a second flatten.
+    """
+    stepf = step.astype(jnp.float32) + 1.0
+    if kind == "adamw_b":
+        gb = grads if grads_are_buckets else bk.flatten(plan, grads)
+        pb = bk.flatten(plan, params)
+        outs = [ _adamw_update(g, m, v, p, lr=lr, b1=0.9, b2=0.95, eps=1e-8,
+                               wd=wd, step=stepf)
+                 for g, m, v, p in zip(gb, opt_state["m"], opt_state["v"], pb)]
+        upd_b = [o[0] for o in outs]
+        new = {"m": [o[1] for o in outs], "v": [o[2] for o in outs]}
+        return upd_b, new
+    if kind == "sgdm_b":
+        gb = grads if grads_are_buckets else bk.flatten(plan, grads)
+        pb = bk.flatten(plan, params)
+        outs = [_sgdm_update(g, m, p, lr=lr, beta=0.9, wd=wd)
+                for g, m, p in zip(gb, opt_state["m"], pb)]
+        return [o[0] for o in outs], {"m": [o[1] for o in outs]}
+    if kind == "adamw":
+        flat_g, td = jax.tree.flatten(grads)
+        flat_m = jax.tree.flatten(opt_state["m"])[0]
+        flat_v = jax.tree.flatten(opt_state["v"])[0]
+        flat_p = jax.tree.flatten(params)[0]
+        outs = [_adamw_update(g, m, v, p, lr=lr, b1=0.9, b2=0.95, eps=1e-8,
+                              wd=wd, step=stepf)
+                for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        upd = jax.tree.unflatten(td, [o[0] for o in outs])
+        new = {"m": jax.tree.unflatten(td, [o[1] for o in outs]),
+               "v": jax.tree.unflatten(td, [o[2] for o in outs])}
+        return upd, new
+    if kind == "sgdm":
+        flat_g, td = jax.tree.flatten(grads)
+        flat_m = jax.tree.flatten(opt_state["m"])[0]
+        flat_p = jax.tree.flatten(params)[0]
+        outs = [_sgdm_update(g, m, p, lr=lr, beta=0.9, wd=wd)
+                for g, m, p in zip(flat_g, flat_m, flat_p)]
+        return (jax.tree.unflatten(td, [o[0] for o in outs]),
+                {"m": jax.tree.unflatten(td, [o[1] for o in outs])})
+    if kind == "adafactor":
+        flat_g, td = jax.tree.flatten(grads)
+        flat_s = jax.tree.flatten(opt_state["per"],
+                                  is_leaf=lambda x: isinstance(x, dict) and
+                                  ("vr" in x or "v" in x))[0]
+        flat_p = jax.tree.flatten(params)[0]
+        outs = [_adafactor_update(g, s, p, lr=lr, b2=0.999, eps=1e-30, wd=wd,
+                                  step=stepf)
+                for g, s, p in zip(flat_g, flat_s, flat_p)]
+        upd = jax.tree.unflatten(td, [o[0] for o in outs])
+        tds = jax.tree.structure(opt_state["per"],
+                                 is_leaf=lambda x: isinstance(x, dict) and
+                                 ("vr" in x or "v" in x))
+        new = {"per": jax.tree.unflatten(tds, [o[1] for o in outs])}
+        return upd, new
+    raise ValueError(kind)
+
+
+def apply_updates(params, updates, *, plan: bk.BucketPlan | None = None):
+    """params + updates (updates may be buckets)."""
+    if isinstance(updates, list):
+        upd_tree = bk.unflatten(plan, updates)
+    else:
+        upd_tree = updates
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) +
+                                      u.astype(jnp.float32)).astype(p.dtype),
+                        params, upd_tree)

@@ -1,0 +1,5 @@
+from repro.parallel.sharding import (
+    ParamDef, AxisRules, make_rules, use_mesh, current_mesh, current_rules,
+    spec_for, shard_act, sharding_tree, init_params, abstract_params,
+    tree_map_schema, count_params, batch_axes, batch_spec, axis_size,
+)

@@ -1,0 +1,270 @@
+"""Logical-axis sharding rules with divisibility fallbacks.
+
+Params and activations are annotated with *logical* dimension names; rules map those to
+mesh axes. A rule only applies when the dimension size divides evenly by the product of
+the mapped mesh-axis sizes — otherwise the dimension is left unsharded (this is how
+archs with e.g. 8 heads survive a 16-way model axis: attention falls back to sequence
+sharding, see models/attention.py).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Param schema
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParamDef:
+    """Declarative parameter: shape + logical dims + init."""
+    shape: tuple[int, ...]
+    dims: tuple[Any, ...]            # logical names (str) or None, len == rank
+    init: str = "normal"             # normal | zeros | ones
+    scale: float = -1.0              # -1 -> 1/sqrt(fan_in) (fan_in = shape[dims.index-ish 0])
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.dims), (self.shape, self.dims)
+
+
+def is_paramdef(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map_schema(fn, schema):
+    """Map over a nested dict schema whose leaves are ParamDefs, keeping paths."""
+    def rec(node, path):
+        if is_paramdef(node):
+            return fn(path, node)
+        if isinstance(node, dict):
+            return {k: rec(v, path + (k,)) for k, v in node.items()}
+        raise TypeError(f"bad schema node at {path}: {type(node)}")
+    return rec(schema, ())
+
+
+def init_params(schema, key, dtype_override: str | None = None):
+    """Materialize a schema into arrays (deterministic per path)."""
+    def make(path, pd: ParamDef):
+        dt = jnp.dtype(dtype_override or pd.dtype)
+        if pd.init == "zeros":
+            return jnp.zeros(pd.shape, dt)
+        if pd.init == "ones":
+            return jnp.ones(pd.shape, dt)
+        k = jax.random.fold_in(key, hash("/".join(map(str, path))) % (2**31))
+        scale = pd.scale
+        if scale < 0:
+            fan_in = pd.shape[0] if len(pd.shape) >= 1 else 1
+            for s, d in zip(pd.shape, pd.dims):
+                if d == "embed":            # prefer the model-dim as fan-in when marked
+                    fan_in = s
+                    break
+            scale = 1.0 / float(np.sqrt(max(fan_in, 1)))
+        return (jax.random.normal(k, pd.shape, jnp.float32) * scale).astype(dt)
+    return tree_map_schema(make, schema)
+
+
+def abstract_params(schema):
+    """ShapeDtypeStructs for a schema (no allocation — dry-run path)."""
+    return tree_map_schema(
+        lambda path, pd: jax.ShapeDtypeStruct(pd.shape, jnp.dtype(pd.dtype)), schema)
+
+
+def count_params(schema, active_fraction_for: dict[str, float] | None = None) -> int:
+    total = 0
+    def add(path, pd: ParamDef):
+        nonlocal total
+        n = int(np.prod(pd.shape))
+        if active_fraction_for:
+            for marker, frac in active_fraction_for.items():
+                if any(marker in str(p) for p in path):
+                    n = int(n * frac)
+                    break
+        total += n
+        return None
+    tree_map_schema(add, schema)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Axis rules
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AxisRules:
+    """Logical axis -> tuple of mesh axis names."""
+    rules: dict[str, tuple[str, ...]]
+
+    def axes_for(self, logical: str | None) -> tuple[str, ...]:
+        if logical is None:
+            return ()
+        return self.rules.get(logical, ())
+
+
+def make_rules(mesh: Mesh, *, pod_param_mode: str = "sharded") -> AxisRules:
+    """pod_param_mode: 'sharded' (FSDP over pod+data), 'data' (FSDP within pod,
+    replicated across pods), 'replicated' (pure DP: params replicated over pod+data,
+    TP over model only — the paper-faithful Hadoop-style baseline)."""
+    names = set(mesh.axis_names)
+    batch_axes = tuple(a for a in ("pod", "data") if a in names)
+    if pod_param_mode == "sharded":
+        fsdp_axes = batch_axes
+    elif pod_param_mode == "data":
+        fsdp_axes = tuple(a for a in ("data",) if a in names)
+    elif pod_param_mode == "replicated":
+        fsdp_axes = ()
+    else:
+        raise ValueError(pod_param_mode)
+    model = ("model",) if "model" in names else ()
+    return AxisRules(rules={
+        "batch": batch_axes,
+        "embed": fsdp_axes,        # FSDP dim on weights
+        "vocab": model,
+        "mlp": model,
+        "heads": model,
+        "kv_heads": model,
+        "head_dim": model,         # fallback for KV caches with few heads
+        "experts": model,
+        "expert_ff": fsdp_axes,    # expert hidden dim: FSDP (gathered in MoE body)
+        "state": model,            # SSM d_inner channels
+        "seq_model": model,        # sequence-parallel attention fallback
+        "seq": (),
+        "layers": (),
+    })
+
+
+# Thread-local mesh/rules context so model code can be mesh-agnostic.
+class _Ctx(threading.local):
+    mesh: Mesh | None = None
+    rules: AxisRules | None = None
+    manual: frozenset = frozenset()
+
+_CTX = _Ctx()
+
+
+def _filter_rules(rules: AxisRules, manual: frozenset) -> AxisRules:
+    """Drop manual axes from every rule (they are invalid in auto constraints)."""
+    if not manual:
+        return rules
+    return AxisRules(rules={k: tuple(a for a in v if a not in manual)
+                            for k, v in rules.rules.items()})
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None, rules: AxisRules | None = None,
+             manual_axes: frozenset = frozenset()):
+    old = (_CTX.mesh, _CTX.rules, _CTX.manual)
+    _CTX.mesh = mesh
+    base = rules or (make_rules(mesh) if mesh is not None else None)
+    _CTX.rules = _filter_rules(base, manual_axes) if base else None
+    _CTX.manual = manual_axes
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules, _CTX.manual = old
+
+
+def current_mesh() -> Mesh | None:
+    return _CTX.mesh
+
+
+def current_rules() -> AxisRules | None:
+    return _CTX.rules
+
+
+def current_manual_axes() -> frozenset:
+    return _CTX.manual
+
+
+def sharding_mesh():
+    """Mesh object to build NamedShardings / nested shard_maps from.
+
+    Inside a partially-manual shard_map region, sharding objects must reference the
+    ambient AbstractMesh (whose axis types mark the manual axes); at top level, the
+    concrete mesh.
+    """
+    if _CTX.manual:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and am.axis_names:
+            return am
+    return _CTX.mesh
+
+
+def axis_size(name: str) -> int:
+    mesh = current_mesh()
+    if mesh is None or name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]
+
+
+def _axes_fit(size: int, axes: tuple[str, ...], mesh: Mesh) -> bool:
+    prod = 1
+    for a in axes:
+        if a not in mesh.axis_names:
+            return False
+        prod *= mesh.shape[a]
+    return prod > 0 and size % prod == 0
+
+
+def spec_for(shape: tuple[int, ...], dims: tuple[Any, ...],
+             mesh: Mesh | None = None, rules: AxisRules | None = None) -> P:
+    """PartitionSpec for a shape with logical dims, dropping non-dividing axes."""
+    mesh = mesh or current_mesh()
+    rules = rules or current_rules()
+    if mesh is None or rules is None:
+        return P()
+    used: set[str] = set()
+    parts = []
+    for size, logical in zip(shape, dims):
+        axes = rules.axes_for(logical)
+        axes = tuple(a for a in axes if a not in used)
+        if axes and _axes_fit(size, axes, mesh):
+            used.update(axes)
+            parts.append(axes if len(axes) > 1 else axes[0])
+        else:
+            parts.append(None)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def shard_act(x: jax.Array, dims: tuple[Any, ...]) -> jax.Array:
+    """with_sharding_constraint by logical dims (no-op outside a mesh context)."""
+    mesh = current_mesh()
+    rules = current_rules()
+    if mesh is None or rules is None:
+        return x
+    spec = spec_for(x.shape, dims, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(sharding_mesh(), spec))
+
+
+def sharding_tree(schema, mesh: Mesh, rules: AxisRules):
+    """NamedSharding tree matching a schema."""
+    return tree_map_schema(
+        lambda path, pd: NamedSharding(mesh, spec_for(pd.shape, pd.dims, mesh, rules)),
+        schema)
+
+
+def batch_axes(mesh: Mesh | None = None) -> tuple[str, ...]:
+    """Batch axes not already captured by an enclosing manual region."""
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data")
+                 if a in mesh.axis_names and a not in _CTX.manual)
+
+
+def batch_spec(rank: int, mesh: Mesh | None = None) -> P:
+    """P over batch axes on dim0, rest unsharded."""
+    ba = batch_axes(mesh)
+    if not ba:
+        return P()
+    return P(ba if len(ba) > 1 else ba[0], *([None] * (rank - 1)))

@@ -1,0 +1,3 @@
+from repro.serving.engine import (
+    ServeEngine, Request, make_prefill_step, make_decode_step,
+)

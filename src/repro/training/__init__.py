@@ -1,0 +1,4 @@
+from repro.training.state import (
+    init_state, abstract_state, state_shardings, make_bucket_plan,
+)
+from repro.training.step import make_train_step

@@ -1,0 +1,121 @@
+"""Train state construction: concrete, abstract (dry-run), and sharded variants."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, RunConfig
+from repro.core import buckets as bk
+from repro.models import model as mdl
+from repro.optim import optimizers as opt
+from repro.parallel.sharding import (
+    abstract_params, make_rules, sharding_tree, spec_for, tree_map_schema,
+    use_mesh)
+
+
+def bucket_pad_multiple(mesh) -> int:
+    n = 1
+    for s in mesh.shape.values():
+        n *= s
+    return n
+
+
+def make_bucket_plan(cfg: ArchConfig, rc: RunConfig, mesh) -> bk.BucketPlan | None:
+    if not rc.bucketed_updates or cfg.optimizer == "adafactor":
+        return None
+    ps, _ = mdl.model_schema(cfg)
+    abs_p = abstract_params(ps)
+    return bk.make_plan(abs_p, rc.bucket_bytes, bucket_pad_multiple(mesh))
+
+
+def init_state(cfg: ArchConfig, rc: RunConfig, key, mesh=None):
+    """Concrete state (small configs / CPU)."""
+    plan = make_bucket_plan(cfg, rc, mesh) if mesh is not None else None
+    params, biases = mdl.init(cfg, key)
+    o = opt.opt_init(cfg.optimizer, params,
+                     bucketed=rc.bucketed_updates and cfg.optimizer != "adafactor",
+                     bucket_bytes=rc.bucket_bytes,
+                     pad_multiple=bucket_pad_multiple(mesh) if mesh else 1)
+    state = {"params": params, "biases": biases, "opt": o,
+             "step": jnp.zeros((), jnp.int32)}
+    if rc.compress_grads:
+        state["ef"] = (bk.zeros_like_buckets(plan) if plan is not None else
+                       jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                    params))
+    return state
+
+
+def abstract_state(cfg: ArchConfig, rc: RunConfig, mesh, rules):
+    """ShapeDtypeStruct state with shardings attached (dry-run path; no alloc)."""
+    ps, bs = mdl.model_schema(cfg)
+    with use_mesh(mesh, rules):
+        aparams = abstract_params(ps)
+        abiases = abstract_params(bs)
+        shp = sharding_tree(ps, mesh, rules)
+        shb = sharding_tree(bs, mesh, rules)
+        params = jax.tree.map(
+            lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+            aparams, shp)
+        biases = jax.tree.map(
+            lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+            abiases, shb)
+
+        rep = NamedSharding(mesh, P())
+        bucket_sh = NamedSharding(mesh, P(tuple(mesh.axis_names)))
+
+        def opt_like(p_tree, fp32=True, factored=False):
+            def mk(a):
+                return jax.ShapeDtypeStruct(a.shape, jnp.float32,
+                                            sharding=a.sharding)
+            return jax.tree.map(mk, p_tree)
+
+        plan = make_bucket_plan(cfg, rc, mesh)
+        bucketed = plan is not None
+        if cfg.optimizer == "adafactor":
+            def st(path, pd):
+                sp = spec_for(pd.shape, pd.dims, mesh, rules)
+                full = tuple(sp) + (None,) * (len(pd.shape) - len(sp))
+                if len(pd.shape) >= 2:
+                    vr = jax.ShapeDtypeStruct(
+                        pd.shape[:-1], jnp.float32,
+                        sharding=NamedSharding(mesh, P(*full[:-1])))
+                    vc = jax.ShapeDtypeStruct(
+                        pd.shape[:-2] + pd.shape[-1:], jnp.float32,
+                        sharding=NamedSharding(mesh, P(*(full[:-2] + (full[-1],)))))
+                    return {"vr": vr, "vc": vc}
+                return {"v": jax.ShapeDtypeStruct(pd.shape, jnp.float32,
+                                                  sharding=NamedSharding(mesh,
+                                                                         sp))}
+            o = {"per": tree_map_schema(st, ps)}
+        elif bucketed:
+            zb = [jax.ShapeDtypeStruct((s,), jnp.float32, sharding=bucket_sh)
+                  for s in plan.bucket_sizes]
+            if cfg.optimizer == "adamw":
+                o = {"m": zb, "v": list(zb)}
+            else:
+                o = {"m": zb}
+        else:
+            if cfg.optimizer == "adamw":
+                o = {"m": opt_like(params), "v": opt_like(params)}
+            else:
+                o = {"m": opt_like(params)}
+
+        state = {"params": params, "biases": biases, "opt": o,
+                 "step": jax.ShapeDtypeStruct((), jnp.int32, sharding=rep)}
+        if rc.compress_grads:
+            if bucketed:
+                state["ef"] = [jax.ShapeDtypeStruct((s,), jnp.float32,
+                                                    sharding=bucket_sh)
+                               for s in plan.bucket_sizes]
+            else:
+                state["ef"] = opt_like(params)
+    return state
+
+
+def state_shardings(state_abstract):
+    return jax.tree.map(lambda a: a.sharding, state_abstract)

@@ -1,0 +1,220 @@
+"""Train step builder.
+
+Two distribution regimes, both one jit over the full mesh:
+
+- ``pod_param_mode in ("sharded", "data")`` — production path. Params FSDP-sharded
+  (ZeRO-3); GSPMD inserts weight all-gathers / gradient reduce-scatters. The paper's
+  optimizations present: bucketed fused optimizer updates, donation, compressed MoE a2a.
+
+- ``pod_param_mode == "replicated"`` — pure data parallelism (the paper-faithful
+  Hadoop-shaped baseline: every worker holds the full model, gradients are the shuffle).
+  With ``hierarchical_sync``/``compress_grads`` the gradient all-reduce is made
+  *explicit* via ``jax.shard_map`` (manual over the DP axes, ``model`` stays auto):
+  reduce-scatter intra-pod -> (int8) psum cross-pod -> all-gather intra-pod, with error
+  feedback carried in the train state. This is where the paper's three HDFS fixes land
+  on the wire, visibly in the lowered HLO.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, RunConfig
+from repro.core import buckets as bk
+from repro.core.collectives import hierarchical_psum_1d
+from repro.core.compression import compressed_psum_1d, ef_compress
+from repro.models import model as mdl
+from repro.models import moe as moe_mod
+from repro.optim import optimizers as opt
+from repro.optim.schedule import warmup_cosine
+from repro.parallel.sharding import (
+    batch_spec, make_rules, spec_for, use_mesh)
+from repro.training.state import abstract_state, make_bucket_plan
+
+
+def _opt_kind(cfg: ArchConfig, rc: RunConfig) -> str:
+    if cfg.optimizer == "adafactor":
+        return "adafactor"
+    b = rc.bucketed_updates
+    return {"adamw": "adamw_b" if b else "adamw",
+            "sgdm": "sgdm_b" if b else "sgdm"}[cfg.optimizer]
+
+
+def _update_biases(cfg: ArchConfig, biases, aux):
+    """Aux-loss-free router-bias update from observed expert load."""
+    if cfg.moe is None or cfg.moe.router != "sigmoid_bias" or not biases:
+        return biases
+
+    def upd(b, load):
+        return moe_mod.update_router_bias(cfg.moe, b, load)
+
+    new = {}
+    for gk, gv in biases.items():
+        a = aux.get(gk, {})
+        new[gk] = {}
+        for lk, bias_arr in gv.items():
+            load = a.get(lk, {}).get("load")
+            if load is None:
+                new[gk][lk] = bias_arr
+            elif bias_arr.ndim == 2:            # stacked over scan units
+                new[gk][lk] = jax.vmap(upd)(bias_arr, load)
+            else:
+                new[gk][lk] = upd(bias_arr, load)
+    return new
+
+
+def _grad_metrics(grads):
+    gn2 = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads))
+    return jnp.sqrt(gn2)
+
+
+def make_train_step(cfg: ArchConfig, rc: RunConfig, mesh):
+    """Returns (step_fn, state_abstract, shardings). step_fn: (state, batch)->..."""
+    rules = make_rules(mesh, pod_param_mode=rc.pod_param_mode)
+    plan = make_bucket_plan(cfg, rc, mesh)
+    kind = _opt_kind(cfg, rc)
+    explicit = (rc.pod_param_mode == "replicated" and
+                (rc.hierarchical_sync or rc.compress_grads))
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def lr_at(step):
+        return warmup_cosine(step, base_lr=rc.learning_rate,
+                             warmup=rc.warmup_steps, total=rc.steps)
+
+    # ------------------------------------------------------------------
+    def _vg(params, biases, mb):
+        return jax.value_and_grad(
+            lambda pp: mdl.loss_fn(cfg, rc, pp, biases, mb), has_aux=True)(params)
+
+    def grads_and_metrics(params, biases, batch):
+        if rc.microbatch and rc.microbatch > 1:
+            n = rc.microbatch
+
+            def micro(g_acc, mb):
+                (_, (mets, aux)), g = _vg(params, biases, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return g_acc, (mets, aux)
+
+            mbatch = jax.tree.map(
+                lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+            # accumulate in the param dtype (bf16): at 671B a fp32 accumulator is
+            # a 2x-params HBM liability once the scan double-buffers the carry
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+            g, (mets, aux) = jax.lax.scan(micro, g0, mbatch)
+            g = jax.tree.map(lambda x: x / n, g)
+            mets = jax.tree.map(lambda x: jnp.mean(x, axis=0), mets)
+            aux = jax.tree.map(lambda x: jnp.sum(x, axis=0)
+                               if x.ndim and x.shape[0] == n else x, aux)
+            return g, mets, aux
+        (_, (mets, aux)), g = _vg(params, biases, batch)
+        return g, mets, aux
+
+    # ------------------------------------------------------------------
+    def optimizer_stage(state, grads, *, grads_are_buckets=False):
+        lr = lr_at(state["step"])
+        updates, new_opt = opt.opt_update(
+            kind, state["opt"], grads, state["params"], lr=lr,
+            wd=rc.weight_decay, step=state["step"], plan=plan,
+            grads_are_buckets=grads_are_buckets)
+        params = opt.apply_updates(state["params"], updates, plan=plan)
+        return params, new_opt
+
+    # ------------------------------------------------------------------
+    if not explicit:
+        def step_fn(state, batch):
+            with use_mesh(mesh, rules):
+                grads, mets, aux = grads_and_metrics(
+                    state["params"], state["biases"], batch)
+                mets = dict(mets)
+                mets["grad_norm"] = _grad_metrics(grads)
+                params, new_opt = optimizer_stage(state, grads)
+                biases = _update_biases(cfg, state["biases"], aux)
+                new_state = dict(state)
+                new_state.update(params=params, opt=new_opt, biases=biases,
+                                 step=state["step"] + 1)
+                return new_state, mets
+    else:
+        # ---- explicit DP sync: shard_map manual over (pod, data) ----
+        assert plan is not None, \
+            "explicit sync requires bucketed_updates (and a non-adafactor opt)"
+        inner = "data" if "data" in dp_axes else None
+        outer = "pod" if "pod" in dp_axes else None
+        codec = "int8" if rc.compress_grads else "none"
+
+        def body(state, batch):
+            with use_mesh(mesh, rules, manual_axes=frozenset(dp_axes)):
+                grads, mets, aux = grads_and_metrics(
+                    state["params"], state["biases"], batch)
+                # expert-load stats are per-DP-shard inside the manual region;
+                # globalize so the router-bias update stays replica-consistent
+                if aux:
+                    aux = jax.tree.map(lambda x: jax.lax.psum(x, dp_axes), aux)
+                gb = bk.flatten(plan, grads)
+                ef = state.get("ef")
+                new_ef = []
+                synced = []
+                for i, g in enumerate(gb):
+                    if rc.compress_grads:
+                        g, e = ef_compress(g, ef[i] if ef else None)
+                        new_ef.append(e)
+                    if rc.hierarchical_sync:
+                        g = hierarchical_psum_1d(g, inner, outer, codec=codec)
+                    elif rc.compress_grads:
+                        g = compressed_psum_1d(g, dp_axes)
+                    else:
+                        g = jax.lax.psum(g, dp_axes)
+                    synced.append(g / _dp_size(mesh, dp_axes) * 1.0)
+                params, new_opt = optimizer_stage(state, synced,
+                                                  grads_are_buckets=True)
+                biases = _update_biases(cfg, state["biases"], aux)
+                mets = dict(mets)
+                mets["grad_norm"] = sum(jnp.sum(jnp.square(s)) for s in synced) ** 0.5
+                mets = jax.tree.map(lambda x: jax.lax.pmean(x, dp_axes), mets)
+                new_state = dict(state)
+                new_state.update(params=params, opt=new_opt, biases=biases,
+                                 step=state["step"] + 1)
+                if rc.compress_grads:
+                    new_state["ef"] = new_ef
+                return new_state, mets
+
+        dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+        def step_fn(state, batch):
+            st_specs = jax.tree.map(lambda _: P(), state)
+            batch_specs = jax.tree.map(
+                lambda x: P(dp, *([None] * (x.ndim - 1))), batch)
+            return jax.shard_map(
+                body, mesh=mesh,
+                in_specs=(st_specs, batch_specs),
+                out_specs=(jax.tree.map(lambda _: P(), state), P()),
+                axis_names=frozenset(dp_axes),
+                check_vma=False,
+            )(state, batch)
+
+    # jit with shardings + donation (the paper's direct-I/O analogue)
+    st_abs = abstract_state(cfg, rc, mesh, rules)
+    st_sh = jax.tree.map(lambda a: a.sharding, st_abs)
+
+    jit_kwargs = {}
+    if rc.donate_state:
+        jit_kwargs["donate_argnums"] = (0,)
+    fn = jax.jit(step_fn, **jit_kwargs)
+    return fn, st_abs, st_sh, rules
+
+
+def _dp_size(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return float(n)
+
+
+def train_batch_specs(cfg: ArchConfig, shape, mesh, rules):
+    """Shardings for the batch dict."""
+    specs = mdl.input_specs(cfg, shape, mesh, rules)
+    return specs

@@ -1,0 +1,26 @@
+import os
+import sys
+
+# smoke tests and benches must see ONE device (the dry-run sets its own flags in a
+# separate process); a persistent compilation cache makes repeat runs cheap.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_compilation_cache_dir", "/tmp/jax_pytest_cache")
+jax.config.update("jax_persistent_cache_min_compile_time_secs", 1.0)
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def cpu_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.fixture()
+def rng():
+    return jax.random.PRNGKey(0)

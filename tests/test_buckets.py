@@ -1,0 +1,44 @@
+"""Bucketing (output-buffering analogue) roundtrip properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import buckets as bk
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+_DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@given(
+    shapes=st.lists(
+        st.tuples(st.integers(1, 8), st.integers(1, 8)), min_size=1,
+        max_size=10),
+    bucket_bytes=st.sampled_from([64, 256, 1 << 20]),
+    pad=st.sampled_from([1, 4, 8]),
+    seed=st.integers(0, 50),
+)
+def test_flatten_unflatten_roundtrip(shapes, bucket_bytes, pad, seed):
+    rng = np.random.default_rng(seed)
+    tree = {f"p{i}": jnp.asarray(rng.normal(size=s),
+                                 _DTYPES[i % len(_DTYPES)])
+            for i, s in enumerate(shapes)}
+    plan = bk.make_plan(tree, bucket_bytes, pad)
+    assert all(s % pad == 0 for s in plan.bucket_sizes)
+    buckets = bk.flatten(plan, tree)
+    back = bk.unflatten(plan, buckets)
+    for k in tree:
+        np.testing.assert_allclose(np.asarray(back[k], np.float32),
+                                   np.asarray(tree[k], np.float32),
+                                   atol=1e-6)
+        assert back[k].dtype == tree[k].dtype
+
+
+def test_bucket_count_scales_with_limit(rng):
+    tree = {f"p{i}": jnp.zeros((1000,), jnp.float32) for i in range(16)}
+    small = bk.make_plan(tree, bucket_bytes=4000)
+    big = bk.make_plan(tree, bucket_bytes=1 << 20)
+    assert len(small.bucket_sizes) == 16      # one tensor per bucket
+    assert len(big.bucket_sizes) == 1         # fully fused (the paper's buffering)

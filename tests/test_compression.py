@@ -1,0 +1,64 @@
+"""Property tests for the LZO-analogue compression (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import (
+    compress_roundtrip, dequantize_block, ef_compress, quantize_block)
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+@given(n=st.integers(1, 2000), scale=st.floats(1e-3, 1e3), seed=st.integers(0, 99))
+def test_quantization_error_bound(n, scale, seed):
+    """|x - dq(q(x))| <= per-block max/127/2 + eps, elementwise."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=n) * scale, jnp.float32)
+    q, s, m = quantize_block(x)
+    back = dequantize_block(q, s, m)
+    block = 256
+    pad = (-n) % block
+    xp = np.pad(np.asarray(x), (0, pad)).reshape(-1, block)
+    bound = np.abs(xp).max(axis=1, keepdims=True) / 127.0 * 0.51 + 1e-9
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    errp = np.pad(err, (0, pad)).reshape(-1, block)
+    assert np.all(errp <= bound)
+
+
+@given(n=st.integers(1, 1000), seed=st.integers(0, 99))
+def test_error_feedback_invariant(n, seed):
+    """sent + new_err == g + old_err (nothing is lost, only delayed)."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=n), jnp.float32)
+    err = jnp.asarray(rng.normal(size=n) * 0.01, jnp.float32)
+    sent, new_err = ef_compress(g, err)
+    lhs = np.asarray(sent, np.float64) + np.asarray(new_err, np.float64)
+    rhs = np.asarray(g, np.float64) + np.asarray(err, np.float64)
+    np.testing.assert_allclose(lhs, rhs, atol=1e-5)
+
+
+@given(seed=st.integers(0, 99))
+def test_error_feedback_converges(seed):
+    """Repeatedly compressing the same gradient with EF: average of what was sent
+    converges to the true gradient (residual stays bounded)."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=512), jnp.float32)
+    err = None
+    sent_sum = np.zeros(512)
+    T = 20
+    for _ in range(T):
+        sent, err = ef_compress(g, err)
+        sent_sum += np.asarray(sent)
+    avg = sent_sum / T
+    resid = np.abs(np.asarray(err))
+    scale = np.abs(np.asarray(g)).max()
+    np.testing.assert_allclose(avg, np.asarray(g), atol=scale / 127.0 + 1e-3)
+    assert resid.max() <= scale / 127.0 + 1e-5
+
+
+def test_compress_roundtrip_shape_preserved(rng):
+    x = jax.random.normal(rng, (3, 5, 7), jnp.bfloat16)
+    y = compress_roundtrip(x)
+    assert y.shape == x.shape and y.dtype == x.dtype

@@ -1,0 +1,68 @@
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, cell_is_applicable, get_arch
+from repro.models.model import count_params_analytic, count_params_total
+from repro.models.transformer import plan_layers
+
+
+def test_registry_has_all_ten():
+    assert len(ARCHS) == 10
+    for n in ["mamba2-1.3b", "tinyllama-1.1b", "olmo-1b", "gemma2-2b",
+              "starcoder2-7b", "musicgen-medium", "recurrentgemma-2b",
+              "deepseek-v3-671b", "granite-moe-3b-a800m", "internvl2-2b"]:
+        assert n in ARCHS
+
+
+def test_vocab_padding_divisible():
+    for cfg in ARCHS.values():
+        assert cfg.vocab_padded % 256 == 0
+        assert cfg.vocab_padded >= cfg.vocab
+
+
+def test_live_cells_count():
+    live = sum(cell_is_applicable(c, s)[0]
+               for c in ARCHS.values() for s in SHAPES.values())
+    assert live == 32            # 40 cells - 8 long_500k skips
+    for c in ARCHS.values():
+        ok, why = cell_is_applicable(c, SHAPES["long_500k"])
+        assert ok == c.sub_quadratic
+        if not ok:
+            assert "quadratic" in why or "full-attention" in why
+
+
+@pytest.mark.parametrize("name,total_b,tol", [
+    ("tinyllama-1.1b", 1.10, 0.06),
+    ("mamba2-1.3b", 1.34, 0.1),
+    ("olmo-1b", 1.18, 0.08),
+    ("gemma2-2b", 2.61, 0.1),
+    ("starcoder2-7b", 7.40, 0.15),
+    ("recurrentgemma-2b", 2.68, 0.1),
+    ("deepseek-v3-671b", 671.7, 5.0),
+])
+def test_param_counts_match_published(name, total_b, tol):
+    got = count_params_total(get_arch(name)) / 1e9
+    assert abs(got - total_b) <= tol, (name, got)
+
+
+def test_deepseek_active_params():
+    act = count_params_analytic(get_arch("deepseek-v3-671b"), active_only=True)
+    assert 30e9 < act < 40e9      # published ~37B activated
+
+
+def test_layer_plans():
+    groups, tail = plan_layers(get_arch("deepseek-v3-671b"))
+    assert [c for _, c in groups] == [3, 58] and tail is None
+    groups, tail = plan_layers(get_arch("gemma2-2b"))
+    assert len(groups) == 1 and groups[0][1] == 13 and tail is None
+    groups, tail = plan_layers(get_arch("recurrentgemma-2b"))
+    assert groups[0][1] == 8 and tail is not None and len(tail) == 2
+    groups, tail = plan_layers(get_arch("mamba2-1.3b"))
+    assert groups[0][1] == 48
+
+
+def test_reduced_configs_are_small():
+    for cfg in ARCHS.values():
+        r = cfg.reduced()
+        assert count_params_total(r) < 3e6, cfg.name
+        assert r.family == cfg.family and r.pattern == cfg.pattern

@@ -1,0 +1,65 @@
+"""Fault-tolerance policy units: stragglers + coordinator."""
+from repro.ft import Coordinator, CoordinatorConfig, State, StragglerConfig, \
+    StragglerMonitor
+
+
+def test_no_straggler_on_uniform_times():
+    mon = StragglerMonitor([0, 1, 2, 3])
+    for _ in range(10):
+        for h in range(4):
+            mon.record(h, 1.0)
+    assert mon.propose()["action"] == "none"
+
+
+def test_straggler_rebalance_then_exclude():
+    cfg = StragglerConfig(patience=2, exclude_after=6)
+    mon = StragglerMonitor([0, 1, 2, 3], cfg)
+    actions = []
+    for _ in range(12):
+        for h in range(4):
+            mon.record(h, 3.0 if h == 2 else 1.0)
+        actions.append(mon.propose()["action"])
+    assert "rebalance" in actions
+    assert actions[-1] == "exclude"
+    prop = mon.propose()
+    if prop["action"] == "exclude":
+        assert prop["host"] == 2 and 2 not in prop["surviving"]
+
+
+def test_rebalance_shifts_quota():
+    mon = StragglerMonitor([0, 1], StragglerConfig(patience=1))
+    for _ in range(3):
+        mon.record(0, 1.0)
+        mon.record(1, 4.0)
+    p = mon.propose()
+    assert p["action"] == "rebalance"
+    assert p["quota"][1] < 1.0 and p["quota"][0] > 1.0
+
+
+def test_coordinator_degrade_then_remesh():
+    cfg = CoordinatorConfig(heartbeat_timeout=10, misses_to_degrade=2,
+                            misses_to_dead=4)
+    c = Coordinator([0, 1, 2], cfg)
+    now = 0.0
+    for h in (0, 1, 2):
+        c.heartbeat(h, now)
+    assert c.tick(5.0)["action"] == "none"
+    # host 2 goes silent
+    acts = []
+    for t in (20.0, 40.0, 60.0, 80.0):
+        c.heartbeat(0, t)
+        c.heartbeat(1, t)
+        acts.append(c.tick(t)["action"])
+    assert "checkpoint_now" in acts
+    assert acts[-1] == "remesh"
+    assert c.state == State.REMESH
+    c.remesh_done()
+    assert c.state == State.HEALTHY and c.hosts == {0, 1}
+
+
+def test_coordinator_aborts_below_min_hosts():
+    cfg = CoordinatorConfig(heartbeat_timeout=1, misses_to_degrade=1,
+                            misses_to_dead=1, min_hosts=2)
+    c = Coordinator([0, 1], cfg)
+    act = c.tick(100.0)
+    assert act["action"] == "abort"

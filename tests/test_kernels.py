@@ -1,0 +1,113 @@
+"""Pallas kernel sweeps: interpret-mode kernel vs pure-jnp oracle over
+shapes x dtypes (per assignment: every kernel gets an allclose sweep)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import sky
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.quantize.kernel import dequantize_pallas, quantize_pallas
+from repro.kernels.quantize.ref import dequantize_ref, quantize_ref
+from repro.kernels.zones_pairs.kernel import pair_count_pallas, pair_hist_pallas
+from repro.kernels.zones_pairs.ref import pair_count_ref, pair_hist_ref
+
+
+# ---------------------------------------------------------------------------
+# quantize
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,cols", [(8, 256), (16, 1024), (8, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantize_sweep(rng, rows, cols, dtype):
+    x = (jax.random.normal(rng, (rows, cols), jnp.float32) * 3).astype(dtype)
+    q1, s1 = quantize_pallas(x, interpret=True)
+    q2, s2 = quantize_ref(x)
+    if dtype == jnp.float32:
+        np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    else:
+        # bf16 inputs: division order at exact .5 boundaries may differ by 1 LSB
+        d = np.abs(np.asarray(q1, np.int32) - np.asarray(q2, np.int32))
+        assert d.max() <= 1 and (d > 0).mean() < 1e-3
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+    # dequant: kernel vs ref on identical (q, s) must agree exactly; and the
+    # roundtrip error stays within the per-block quantization bound
+    d1 = dequantize_pallas(q1, s1, interpret=True)
+    d2 = dequantize_ref(q1, s1)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6)
+    err = np.abs(np.asarray(d1) - np.asarray(x, np.float32))
+    bound = np.repeat(np.asarray(s1), 256, axis=-1) * 0.51 + 1e-6
+    assert np.all(err <= bound + np.asarray(s1).max())
+
+
+# ---------------------------------------------------------------------------
+# zones_pairs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,tm,tn", [(256, 256, 256, 256),
+                                       (512, 256, 256, 256),
+                                       (512, 512, 128, 256)])
+@pytest.mark.parametrize("radius", [0.02, 0.1])
+def test_pair_count_sweep(m, n, tm, tn, radius):
+    a = jnp.asarray(sky.make_catalog(m, 1))
+    b = jnp.asarray(sky.make_catalog(n, 2))
+    cm = float(np.cos(radius))
+    got = pair_count_pallas(a, b, cm, tm=tm, tn=tn, interpret=True)
+    want = pair_count_ref(a, b, cm)
+    assert int(got) == int(want)
+
+
+def test_pair_count_exclude_self():
+    a = jnp.asarray(sky.make_catalog(256, 3))
+    cm = float(np.cos(0.05))
+    got = pair_count_pallas(a, a, cm, exclude_self=True, tm=128, tn=128,
+                            interpret=True)
+    want = pair_count_ref(a, a, cm, exclude_self=True)
+    assert int(got) == int(want)
+
+
+@pytest.mark.parametrize("nbins", [4, 16, 60])
+def test_pair_hist_sweep(nbins):
+    a = jnp.asarray(sky.make_catalog(256, 4))
+    b = jnp.asarray(sky.make_catalog(512, 5))
+    edges = jnp.asarray(np.cos(np.linspace(0.01, 0.2, nbins)), jnp.float32)
+    got = pair_hist_pallas(a, b, edges, tm=256, tn=256, interpret=True)
+    want = pair_hist_ref(a, b, edges)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,H,Kv,dh,window,cap", [
+    (256, 4, 4, 64, 0, 0.0),
+    (256, 4, 2, 64, 0, 0.0),         # GQA
+    (256, 4, 1, 32, 64, 0.0),        # MQA + window
+    (128, 8, 4, 64, 0, 50.0),        # softcap (gemma2)
+    (192, 2, 2, 64, 0, 0.0),         # non-multiple of block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_sweep(rng, S, H, Kv, dh, window, cap, dtype):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    q = (jax.random.normal(k1, (2, S, H, dh)) * 0.5).astype(dtype)
+    k = (jax.random.normal(k2, (2, S, Kv, dh)) * 0.5).astype(dtype)
+    v = (jax.random.normal(k3, (2, S, Kv, dh)) * 0.5).astype(dtype)
+    got = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                 softcap=cap, bq=64, bk=64, interpret=True)
+    want = attention_ref(q, k, v, causal=True, window=window, softcap=cap)
+    atol = 2e-6 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol)
+
+
+def test_flash_custom_vjp_backward(rng):
+    from repro.kernels.flash_attention.ops import flash_attention
+    q = jax.random.normal(rng, (1, 64, 2, 16))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (1, 64, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (1, 64, 2, 16))
+    g1 = jax.grad(lambda q: jnp.sum(flash_attention(q, k, v, True, 0, 0.0,
+                                                    None, False)))(q)
+    g2 = jax.grad(lambda q: jnp.sum(attention_ref(q, k, v, causal=True)))(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-5)

@@ -1,0 +1,37 @@
+"""Multi-device semantics via subprocess (8 host devices; smoke tests keep 1)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "md_check.py")
+
+
+def _run(check: str, timeout: int = 900):
+    env = dict(os.environ)
+    env.pop("JAX_PLATFORMS", None)
+    r = subprocess.run([sys.executable, SCRIPT, check], capture_output=True,
+                       text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, f"{check} failed:\n{r.stdout}\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_hierarchical_equals_flat_psum():
+    assert "OK" in _run("hier")
+
+
+@pytest.mark.slow
+def test_compressed_psum_close_to_exact():
+    assert "OK" in _run("compressed")
+
+
+@pytest.mark.slow
+def test_moe_expert_parallel_multidevice():
+    assert "OK" in _run("moe")
+
+
+@pytest.mark.slow
+def test_train_modes_multidevice():
+    assert "OK" in _run("train")

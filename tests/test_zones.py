@@ -1,0 +1,60 @@
+"""Zones MapReduce apps vs brute-force oracles (hypothesis over catalogs)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import sky
+from repro.mapreduce import (bucket_by_zone, neighbor_search_count,
+                             neighbor_statistics)
+
+settings.register_profile("ci", deadline=None, max_examples=10)
+settings.load_profile("ci")
+
+
+@given(n=st.integers(50, 800), radius=st.floats(0.01, 0.3),
+       seed=st.integers(0, 100))
+def test_neighbor_search_matches_brute_force(n, radius, seed):
+    xyz = sky.make_catalog(n, seed)
+    got = neighbor_search_count(xyz, radius, tile=64)
+    want = sky.brute_force_pairs(xyz, radius)
+    assert got == want
+
+
+@given(seed=st.integers(0, 20))
+def test_statistics_matches_brute_force(seed):
+    xyz = sky.make_catalog(600, seed)
+    edges_rad = np.linspace(0.02, 0.12, 6)
+    h = neighbor_statistics(xyz, edges_arcsec=edges_rad / sky.ARCSEC, tile=64)
+    hb = sky.brute_force_hist(xyz, np.concatenate([[0], edges_rad]))
+    assert np.array_equal(h, hb)
+
+
+def test_compressed_shuffle_close():
+    """int16 coordinate shuffle (LZO analogue): 2x fewer bytes, tiny count error."""
+    xyz = sky.make_catalog(2000, 5)
+    radius = 0.05
+    zd_full = bucket_by_zone(xyz, radius, tile=64)
+    zd_comp = bucket_by_zone(xyz, radius, tile=64, compress_coords=True)
+    assert zd_comp.shuffle_bytes * 2 == zd_full.shuffle_bytes
+    a = neighbor_search_count(xyz, radius, tile=64)
+    b = neighbor_search_count(xyz, radius, tile=64, compress_coords=True)
+    assert abs(a - b) <= max(3, int(0.01 * a))
+
+
+def test_border_replication_sound():
+    """Bucket arrays must contain every point within radius of the zone."""
+    xyz = sky.make_catalog(500, 9)
+    radius = 0.1
+    zd = bucket_by_zone(xyz, radius, tile=64)
+    dec = sky.dec_of(xyz)
+    z = np.clip(((dec + np.pi / 2) / zd.zone_height).astype(int), 0,
+                zd.owned.shape[0] - 1)
+    for k in range(zd.owned.shape[0]):
+        # every point whose dec is within radius of band k must be in bucket k
+        lo = k * zd.zone_height - np.pi / 2 - radius
+        hi = (k + 1) * zd.zone_height - np.pi / 2 + radius
+        members = {tuple(np.round(p, 5)) for p in zd.bucket[k]
+                   if np.linalg.norm(p) > 0.5}
+        need = xyz[(dec >= lo) & (dec <= hi)]
+        for p in need:
+            assert tuple(np.round(p, 5)) in members
