@@ -65,10 +65,10 @@ import sys; sys.path.insert(0, %r)
 import json, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.core.collectives import hierarchical_psum_1d
+from repro.core.compat import make_mesh, shard_map
 from repro.core.compression import compressed_psum_1d
 from repro.core.hlo_analysis import analyze_hlo
-mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*3)
+mesh = make_mesh((2,2,2), ("pod","data","model"))
 n = 16 << 20
 x = jax.ShapeDtypeStruct((n,), jnp.float32)
 out = {}
@@ -77,8 +77,8 @@ for name, body in {
   "hier": lambda v: hierarchical_psum_1d(v, "data", "pod"),
   "hier_int8": lambda v: hierarchical_psum_1d(v, "data", "pod", codec="int8"),
 }.items():
-    f = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
-                axis_names=frozenset({"pod","data"}), check_vma=False))
+    f = jax.jit(shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
+                          axis_names=frozenset({"pod","data"})))
     hlo = f.lower(x).compile().as_text()
     a = analyze_hlo(hlo, pod_size=4)
     out[name] = {"intra": a.coll_wire_intra, "cross": a.coll_wire_cross}
@@ -132,51 +132,68 @@ def fig2_pipeline():
 
 
 def fig3_improvements():
-    """Neighbor Searching with the paper's three improvements applied stepwise."""
+    """Neighbor Searching with the paper's improvements applied stepwise —
+    each variant is the SAME job with a stage swapped (block size via tile /
+    zone_height, shuffle codec via the registry), through the Job API."""
     from repro.data import sky
-    from repro.mapreduce import bucket_by_zone, neighbor_search_count
+    from repro.mapreduce import neighbor_search_job, run_job
     xyz = sky.make_catalog(20000, 0)
     radius = 0.02
     rows = []
     variants = {
         # buffering analogue = the paper's block-size tuning ("always favor larger
         # blocks"): 4x-taller zones -> fewer, fuller buckets, less border copying
-        "baseline": dict(tile=64, compress_coords=False),
+        "baseline": dict(tile=64, codec="identity"),
         "bigger_blocks": dict(tile=256, zone_height=4 * radius),
-        "compressed": dict(tile=64, compress_coords=True),      # LZO analogue
-        "blocks+compressed": dict(tile=256, zone_height=4 * radius,
-                                  compress_coords=True),
+        "compressed_int16": dict(tile=64, codec="int16"),    # LZO analogue
+        "compressed_int8": dict(tile=64, codec="int8"),      # heavier codec
+        "blocks+int16": dict(tile=256, zone_height=4 * radius, codec="int16"),
     }
-    want = None
     for name, kw in variants.items():
-        t0 = time.perf_counter()
-        got = neighbor_search_count(xyz, radius, **kw)
-        dt = (time.perf_counter() - t0) * 1e6
-        zd = bucket_by_zone(xyz, radius, **kw)
-        if want is None:
-            want = got
-        rows.append((f"fig3_{name}", dt,
-                     f"pairs={got}_shuffleB={zd.shuffle_bytes}"))
+        res = run_job(neighbor_search_job(radius, **kw), xyz)
+        st = res.stats
+        rows.append((f"fig3_{name}", st.wall_s * 1e6,
+                     f"pairs={res.output}_shuffleB={st.shuffle_wire_bytes}"
+                     f"_ratio={st.compression_ratio:.1f}"
+                     f"_domstage={st.dominant_stage}"))
     return rows
 
 
 def table3_apps():
-    """App runtimes vs radius (the paper's theta sweep) + the stats app."""
+    """App runtimes vs radius (the paper's theta sweep) through the Job API,
+    with the per-job Amdahl numbers the paper's Table 4 derives per task —
+    plus the batched search+stats pass and the wordcount job."""
     from repro.data import sky
-    from repro.mapreduce import neighbor_search_count, neighbor_statistics
+    from repro.mapreduce import (ZonePartitioner, neighbor_search_job,
+                                 neighbor_statistics_job, run_job, run_jobs,
+                                 token_histogram)
     xyz = sky.make_catalog(20000, 1)
     rows = []
     for radius, label in [(0.01, "15as_scaled"), (0.02, "30as_scaled"),
                           (0.04, "60as_scaled")]:
-        t0 = time.perf_counter()
-        got = neighbor_search_count(xyz, radius, tile=256)
-        rows.append((f"table3_search_{label}",
-                     (time.perf_counter() - t0) * 1e6, f"pairs={got}"))
-    t0 = time.perf_counter()
-    h = neighbor_statistics(xyz, edges_arcsec=np.linspace(0.005, 0.04, 8) /
-                            sky.ARCSEC, tile=256)
-    rows.append(("table3_stats", (time.perf_counter() - t0) * 1e6,
-                 f"pairs_total={int(h.sum())}"))
+        res = run_job(neighbor_search_job(radius, tile=256), xyz)
+        am = res.stats.roofline().amdahl_numbers()
+        rows.append((f"table3_search_{label}", res.stats.wall_s * 1e6,
+                     f"pairs={res.output}_AD={am['AD']:.2g}"))
+    edges = np.linspace(0.005, 0.04, 8)
+    res = run_job(neighbor_statistics_job(edges / sky.ARCSEC, tile=256), xyz)
+    rows.append(("table3_stats", res.stats.wall_s * 1e6,
+                 f"pairs_total={int(res.output.sum())}"))
+    # both apps batched over ONE shuffle (the Job API's multi-job batching)
+    part = ZonePartitioner(float(edges[-1]))
+    batched = run_jobs(
+        [neighbor_search_job(float(edges[-1]), partitioner=part, tile=256),
+         neighbor_statistics_job(edges / sky.ARCSEC, partitioner=part,
+                                 tile=256)], xyz)
+    rows.append(("table3_search+stats_batched", batched[0].stats.wall_s * 1e6,
+                 f"pairs={batched[0].output}"))
+    # non-astronomy workload on the same engine (Hadoop's wordcount)
+    from repro.data import SyntheticTokens
+    toks = SyntheticTokens(50000, 0).block(0, 64, 1024)
+    res = token_histogram(toks, 50000, n_partitions=16)
+    rows.append(("table3_wordcount_64x1024", res.stats.wall_s * 1e6,
+                 f"tokens={toks.size}_top={int(res.output.max())}"
+                 f"_domstage={res.stats.dominant_stage}"))
     return rows
 
 

@@ -1,5 +1,11 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import os
 import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):   # `python benchmarks/run.py`
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 
 def main() -> None:

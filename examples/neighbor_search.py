@@ -1,18 +1,32 @@
-"""The paper's applications end-to-end on a synthetic sky catalog.
+"""The paper's applications end-to-end on a synthetic sky catalog, through
+the composable Job API.
 
-Neighbor Searching (data-intensive) + Neighbor Statistics (compute-intensive),
-with the three paper optimizations toggled (buffering/batching, compression).
+Neighbor Searching (data-intensive) + Neighbor Statistics (compute-intensive)
+are built from pluggable stages — ``ZonePartitioner`` (map), a registered
+``ShuffleCodec`` (shuffle), and pair-kernel reducers — and run by one engine,
+which also batches both apps over a single shuffle. Every run prints its
+``StageStats`` and the per-job Amdahl numbers (the paper's Table-4 analysis).
 
     PYTHONPATH=src python examples/neighbor_search.py [--n 50000]
 """
 import argparse
-import time
 
 import numpy as np
 
 from repro.data import sky
-from repro.mapreduce import (bucket_by_zone, neighbor_search_count,
-                             neighbor_statistics)
+from repro.mapreduce import (ZonePartitioner, available_codecs,
+                             neighbor_search_job, neighbor_statistics_job,
+                             run_job, run_jobs)
+
+
+def show(res, label):
+    st = res.stats
+    am = st.roofline().amdahl_numbers()
+    print(f"  {label}: {st.wall_s:.2f}s "
+          f"(map {st.map_wall_s:.2f} / shuffle {st.shuffle_wall_s:.2f} "
+          f"/ reduce {st.reduce_wall_s:.2f}; dominant={st.dominant_stage}) "
+          f"shuffle={st.shuffle_wire_bytes / 1e6:.1f}MB "
+          f"x{st.compression_ratio:.1f} AD={am['AD']:.2g}")
 
 
 def main():
@@ -26,30 +40,31 @@ def main():
 
     print("-- Neighbor Searching (radius sweep, cf. paper Table 3) --")
     for radius in (args.radius / 2, args.radius, args.radius * 2):
-        t0 = time.perf_counter()
-        count = neighbor_search_count(xyz, radius, tile=256)
-        dt = time.perf_counter() - t0
-        print(f"  radius={radius:.3f} rad: {count} pairs in {dt:.2f}s")
+        res = run_job(neighbor_search_job(radius, tile=256), xyz)
+        print(f"  radius={radius:.3f} rad: {res.output} pairs in "
+              f"{res.stats.wall_s:.2f}s")
 
-    print("-- paper optimizations (cf. Figure 3) --")
-    for name, kw in {
+    print(f"-- stage swaps (cf. Figure 3; codecs: {available_codecs()}) --")
+    for label, kw in {
         "baseline": dict(tile=64),
         "batched (buffering analogue)": dict(tile=512),
-        "compressed shuffle (LZO analogue)": dict(tile=512,
-                                                  compress_coords=True),
+        "int16 shuffle (LZO analogue)": dict(tile=512, codec="int16"),
+        # int8's ~1/127 coordinate step is coarse for radii this small: max
+        # compression, visible count error — the LZO trade taken too far
+        "int8 shuffle (block-quantized)": dict(tile=512, codec="int8"),
     }.items():
-        t0 = time.perf_counter()
-        count = neighbor_search_count(xyz, args.radius, **kw)
-        dt = time.perf_counter() - t0
-        zd = bucket_by_zone(xyz, args.radius, **kw)
-        print(f"  {name}: {dt:.2f}s, shuffle={zd.shuffle_bytes/1e6:.1f}MB, "
-              f"pairs={count}")
+        res = run_job(neighbor_search_job(args.radius, **kw), xyz)
+        show(res, f"{label}: pairs={res.output}")
 
-    print("-- Neighbor Statistics (cf. paper section 2.2) --")
+    print("-- both apps batched over ONE shuffle (cf. paper section 2.2) --")
     edges = np.linspace(args.radius / 8, args.radius, 8)
-    t0 = time.perf_counter()
-    h = neighbor_statistics(xyz, edges_arcsec=edges / sky.ARCSEC, tile=256)
-    print(f"  histogram in {time.perf_counter()-t0:.2f}s: {h.tolist()}")
+    part = ZonePartitioner(args.radius)
+    search, stats = run_jobs(
+        [neighbor_search_job(args.radius, partitioner=part, tile=256),
+         neighbor_statistics_job(edges / sky.ARCSEC, partitioner=part,
+                                 tile=256)], xyz)
+    print(f"  pairs={search.output}, histogram={stats.output.tolist()}")
+    show(search, "batched search+stats")
 
 
 if __name__ == "__main__":

@@ -34,6 +34,17 @@ class RooflineTerms:
     chips: int
     model_flops: float = 0.0
 
+    @classmethod
+    def from_stage_bytes(cls, *, flops: float, hbm_bytes: float,
+                         wire_bytes: float, chips: int = 1,
+                         model_flops: float = 0.0) -> "RooflineTerms":
+        """Build terms from per-stage MapReduce accounting (StageStats):
+        reduce FLOPs -> compute, map+reduce bytes -> memory, shuffle wire
+        bytes -> the intra-pod collective term (the paper's network I/O)."""
+        return cls(flops=flops, hbm_bytes=hbm_bytes,
+                   coll_bytes_intra=wire_bytes, coll_bytes_cross=0.0,
+                   chips=chips, model_flops=model_flops or flops)
+
     @property
     def t_compute(self) -> float:
         return self.flops / (self.chips * PEAK_FLOPS)

@@ -18,9 +18,9 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-@functools.partial(jax.custom_vjp,
-                   nondiff_argnames=("causal", "window", "softcap", "scale",
-                                     "use_pallas"))
+# nondiff args by position (3..7): works on jax versions without
+# custom_vjp(nondiff_argnames=...)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
 def flash_attention(q, k, v, causal=True, window=0, softcap=0.0, scale=None,
                     use_pallas=None):
     use = _on_tpu() if use_pallas is None else use_pallas

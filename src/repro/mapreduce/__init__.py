@@ -1,3 +1,28 @@
-from repro.mapreduce.api import bucket_by_zone, sharded_zone_reduce, ZonedData
-from repro.mapreduce.zones import neighbor_search_count, neighbor_pairs_dense
+"""Composable MapReduce on a jax mesh.
+
+Stage plugins (``Partitioner`` / ``ShuffleCodec`` / ``Reducer``) compose into
+a ``MapReduceJob`` run by one engine (``job.py``); every run emits
+``StageStats`` for per-stage Amdahl accounting. The paper's two apps
+(``zones.py``, ``stats.py``) and the wordcount job (``wordcount.py``) are
+thin definitions on this API; ``api.py`` keeps the legacy surface.
+"""
+# Job API (the composable surface)
+from repro.mapreduce.codecs import (EncodedShuffle, IdentityCodec,
+                                    Int8BlockCodec, Int16Codec, ShuffleCodec,
+                                    available_codecs, get_codec,
+                                    register_codec)
+from repro.mapreduce.instrumentation import StageStats
+from repro.mapreduce.job import (HashPartitioner, JobResult, MapReduceJob,
+                                 Partitioner, Reducer, ShuffledData,
+                                 reduce_stage, run_job, run_jobs,
+                                 shuffle_stage)
+from repro.mapreduce.zones import (PairCountReducer, ZonePartitioner,
+                                   neighbor_pairs_dense, neighbor_search_job)
+from repro.mapreduce.stats import PairHistReducer, neighbor_statistics_job
+from repro.mapreduce.wordcount import (TokenHistogramReducer, token_histogram,
+                                       token_histogram_job)
+
+# Legacy surface (deprecated wrappers; kept for compatibility)
+from repro.mapreduce.api import ZonedData, bucket_by_zone, sharded_zone_reduce
+from repro.mapreduce.zones import neighbor_search_count
 from repro.mapreduce.stats import neighbor_statistics

@@ -1,23 +1,20 @@
-"""Minimal mesh MapReduce: zone bucketing (map+shuffle) and sharded reduce.
+"""Legacy mesh-MapReduce surface, now thin shims over the Job API.
 
-Mirrors the paper's Hadoop structure:
-- *map*: assign each catalog point a zone key; emit border copies so every zone
-  bucket is self-contained (the paper's mappers "copy objects within a certain
-  region around each block"),
-- *shuffle*: bucket-by-key into fixed-capacity padded arrays (host-side, like the
-  sort/spill phase). Optional int16 coordinate compression = the LZO analogue.
-- *reduce*: per-zone pair kernels over the mesh (shard_map over the data axis),
-  combined with psum (the paper's second, trivial MapReduce step).
+The original hard-coded pipeline (``bucket_by_zone`` with a
+``compress_coords`` boolean + ``sharded_zone_reduce``) is kept for backward
+compatibility; both delegate to the composable engine in
+``mapreduce/job.py`` (``shuffle_stage`` / ``reduce_stage``), with the codec
+chosen from the registry in ``mapreduce/codecs.py``. New code should build a
+``MapReduceJob`` and call ``run_job``/``run_jobs`` instead.
 """
 from __future__ import annotations
 
 import dataclasses
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.data import sky
+from repro.mapreduce.instrumentation import StageStats
+from repro.mapreduce.job import Reducer, ShuffledData, reduce_stage, shuffle_stage
 
 
 @dataclasses.dataclass
@@ -30,81 +27,33 @@ class ZonedData:
     shuffle_bytes: int         # bytes that crossed the shuffle (for the benches)
 
 
-def _pad_to(x: np.ndarray, n: int) -> np.ndarray:
-    out = np.zeros((n, x.shape[1]), x.dtype)
-    out[:len(x)] = x
-    return out
-
-
-def _round_up(x: int, m: int) -> int:
-    return max(m, ((x + m - 1) // m) * m)
-
-
 def bucket_by_zone(xyz: np.ndarray, radius: float, *, zone_height: float = 0.0,
                    tile: int = 256, compress_coords: bool = False,
                    pad_zones_to: int = 1) -> ZonedData:
-    """Map + shuffle. zone_height defaults to the radius (paper's choice: favor
-    larger blocks; border copies then come only from adjacent zones)."""
-    h = zone_height or max(radius, 1e-4)
-    Z = sky.n_zones(h)
-    Z = _round_up(Z, pad_zones_to)
-    dec = sky.dec_of(xyz)
-    z = np.clip(((dec + np.pi / 2) / h).astype(np.int32), 0, Z - 1)
+    """Map + shuffle via the Job API's ``shuffle_stage`` with a
+    ``ZonePartitioner``; ``compress_coords`` selects the int16 codec (the
+    LZO analogue). zone_height defaults to the radius (paper's choice)."""
+    from repro.mapreduce.zones import ZonePartitioner
+    part = ZonePartitioner(radius, zone_height)
+    stats = StageStats()
+    sd = shuffle_stage(xyz, part, "int16" if compress_coords else "identity",
+                       tile=tile, pad_partitions_to=pad_zones_to, stats=stats)
+    return ZonedData(sd.owned, sd.bucket, sd.n_owned, part.height, radius,
+                     stats.shuffle_wire_bytes)
 
-    if compress_coords:
-        # int16 shuffle payload (the LZO trade: fewer bytes, cheap codec)
-        q = np.clip(np.round(xyz * 32767.0), -32767, 32767).astype(np.int16)
-        xyz_s = (q.astype(np.float32) / 32767.0)
-        payload_bytes_per_point = 6
-    else:
-        xyz_s = xyz.astype(np.float32)
-        payload_bytes_per_point = 12
 
-    owned_lists = [xyz_s[z == k] for k in range(Z)]
-    # border copies: a point within `radius` of a zone boundary is replicated into
-    # the adjacent zone's bucket
-    lo_border = (dec - (z * h - np.pi / 2)) <= radius          # near lower edge
-    hi_border = (((z + 1) * h - np.pi / 2) - dec) <= radius    # near upper edge
-    bucket_lists = []
-    for k in range(Z):
-        parts = [owned_lists[k]]
-        if k > 0:
-            parts.append(xyz_s[(z == k - 1) & hi_border])
-        if k + 1 < Z:
-            parts.append(xyz_s[(z == k + 1) & lo_border])
-        bucket_lists.append(np.concatenate(parts, axis=0) if parts else
-                            np.zeros((0, 3), np.float32))
+class _FnReducer(Reducer):
+    def __init__(self, fn):
+        self._fn = fn
 
-    C1 = _round_up(max(len(o) for o in owned_lists), tile)
-    C2 = _round_up(max(len(b) for b in bucket_lists), tile)
-    owned = np.stack([_pad_to(o, C1) for o in owned_lists])
-    bucket = np.stack([_pad_to(b, C2) for b in bucket_lists])
-    n_owned = np.array([len(o) for o in owned_lists], np.int32)
-    shuffle_bytes = int(sum(len(b) for b in bucket_lists)) * payload_bytes_per_point
-    return ZonedData(owned, bucket, n_owned, h, radius, shuffle_bytes)
+    def per_partition(self, owned_p, bucket_p):
+        return self._fn(owned_p, bucket_p)
 
 
 def sharded_zone_reduce(per_zone_fn, zd: ZonedData, mesh=None):
-    """Apply ``per_zone_fn(owned_z, bucket_z) -> array`` over all zones, sharded over
-    the mesh's data axis when given, and sum the results."""
-    owned = jnp.asarray(zd.owned)
-    bucket = jnp.asarray(zd.bucket)
-    if mesh is None or "data" not in mesh.axis_names or mesh.shape["data"] == 1:
-        out = jax.lax.map(lambda ab: per_zone_fn(ab[0], ab[1]), (owned, bucket))
-        return jnp.sum(out, axis=0)
-
-    from jax.sharding import PartitionSpec as P
-
-    def body(o, b):
-        r = jax.lax.map(lambda ab: per_zone_fn(ab[0], ab[1]), (o, b))
-        return jax.lax.psum(jnp.sum(r, axis=0), "data")
-
-    Z = owned.shape[0]
-    assert Z % mesh.shape["data"] == 0, (Z, mesh.shape)
-    return jax.shard_map(
-        body, mesh=mesh,
-        in_specs=(P("data", None, None), P("data", None, None)),
-        out_specs=P(),
-        axis_names=frozenset({"data"}),
-        check_vma=False,
-    )(owned, bucket)
+    """Apply ``per_zone_fn(owned_z, bucket_z) -> array`` over all zones,
+    sharded over the mesh's data axis when given, and sum the results."""
+    sd = ShuffledData(owned=np.asarray(zd.owned), bucket=np.asarray(zd.bucket),
+                      n_owned=np.asarray(zd.n_owned),
+                      n_bucket=np.zeros(len(zd.n_owned), np.int32))
+    return reduce_stage([_FnReducer(per_zone_fn)], sd, mesh)[0]

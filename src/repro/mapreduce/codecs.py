@@ -1,0 +1,179 @@
+"""Shuffle codecs: pluggable wire formats for the shuffle stage.
+
+The paper's LZO result generalizes: on a node whose bottleneck resource also
+pays for I/O, shrinking the bytes that transit the shuffle is a win even when
+the codec costs compute. This module unifies the two compression tricks that
+previously lived in separate corners of the repo —
+
+- the int16 coordinate trick from the old ``mapreduce/api.py`` shuffle
+  (``compress_coords=True``), and
+- the int8 block-quantizer from ``core/compression.py`` (the gradient-sync
+  codec),
+
+behind one ``ShuffleCodec`` encode/decode interface with explicit
+``wire_bytes`` accounting, looked up by name in a registry. A
+``MapReduceJob`` names its codec; the engine never special-cases one.
+
+Contract (property-checked in ``tests/test_mapreduce_job.py``):
+- ``decode(encode(x))`` round-trips within ``error_bound(x)`` elementwise,
+- ``encode(x).wire_bytes == nbytes(x.size)`` — the static accounting formula
+  and the actual payload agree, so ``StageStats.shuffle_wire_bytes`` can be
+  computed per-bucket without materializing per-bucket payloads.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class EncodedShuffle:
+    """A shuffle payload as it would cross the wire."""
+    codec: str
+    arrays: tuple                 # wire arrays (dtype = wire format)
+    shape: tuple                  # original logical shape
+    wire_bytes: int
+
+
+class ShuffleCodec:
+    """Interface: encode/decode + byte accounting. Subclass and register."""
+
+    name: str = "base"
+
+    def nbytes(self, n_elements: int) -> int:
+        """Wire bytes for a payload of ``n_elements`` scalars."""
+        raise NotImplementedError
+
+    def error_bound(self, x: np.ndarray) -> float:
+        """Max elementwise |x - decode(encode(x))| for in-domain inputs."""
+        raise NotImplementedError
+
+    def encode(self, x: np.ndarray) -> EncodedShuffle:
+        raise NotImplementedError
+
+    def decode(self, enc: EncodedShuffle) -> np.ndarray:
+        raise NotImplementedError
+
+    def roundtrip(self, x: np.ndarray) -> np.ndarray:
+        """What the reducers see after the payload crosses the shuffle."""
+        return self.decode(self.encode(np.asarray(x, np.float32)))
+
+
+class IdentityCodec(ShuffleCodec):
+    """float32 passthrough — the uncompressed-shuffle baseline."""
+
+    name = "identity"
+
+    def nbytes(self, n_elements: int) -> int:
+        return 4 * n_elements
+
+    def error_bound(self, x) -> float:
+        return 0.0
+
+    def encode(self, x):
+        x = np.asarray(x, np.float32)
+        return EncodedShuffle(self.name, (x,), x.shape, x.nbytes)
+
+    def decode(self, enc):
+        return enc.arrays[0].reshape(enc.shape)
+
+
+class Int16Codec(ShuffleCodec):
+    """Fixed-point int16 over the domain [-max_abs, max_abs] (2x smaller).
+
+    ``max_abs=1.0`` is exactly the old ``compress_coords=True`` coordinate
+    trick (unit-sphere catalogs). Other domains parameterize ``max_abs``;
+    integer-valued payloads with ``max_abs < 32767`` survive a round() on the
+    reduce side losslessly (used by the wordcount job).
+    """
+
+    name = "int16"
+
+    def __init__(self, max_abs: float = 1.0):
+        self.max_abs = float(max_abs)
+
+    def nbytes(self, n_elements: int) -> int:
+        return 2 * n_elements
+
+    def error_bound(self, x) -> float:
+        return self.max_abs / 32767.0
+
+    def encode(self, x):
+        x = np.asarray(x, np.float32)
+        q = np.clip(np.round(x * (32767.0 / self.max_abs)),
+                    -32767, 32767).astype(np.int16)
+        return EncodedShuffle(self.name, (q,), x.shape, q.nbytes)
+
+    def decode(self, enc):
+        return (enc.arrays[0].astype(np.float32) *
+                (self.max_abs / 32767.0)).reshape(enc.shape)
+
+
+class Int8BlockCodec(ShuffleCodec):
+    """Block-wise int8 with per-block fp32 max-abs scales (~4x smaller).
+
+    Reuses ``core/compression.py``'s quantizer — the same codec the compressed
+    gradient all-reduce uses — so the shuffle and the collective share one wire
+    format and one set of tests. Scale-free: handles any dynamic range.
+    """
+
+    name = "int8"
+
+    def __init__(self, block: int = 0):
+        from repro.core import compression
+        self.block = int(block) or compression.BLOCK
+
+    def nbytes(self, n_elements: int) -> int:
+        from repro.core.compression import int8_wire_bytes
+        return int8_wire_bytes(n_elements, self.block)
+
+    def error_bound(self, x) -> float:
+        x = np.asarray(x, np.float32)
+        return (float(np.max(np.abs(x))) / 127.0) if x.size else 0.0
+
+    def encode(self, x):
+        from repro.core.compression import quantize_block
+        x = np.asarray(x, np.float32)
+        q, scale, _ = quantize_block(x.reshape(-1), self.block)
+        q, scale = np.asarray(q), np.asarray(scale, np.float32)
+        return EncodedShuffle(self.name, (q, scale), x.shape,
+                              self.nbytes(x.size))
+
+    def decode(self, enc):
+        from repro.core.compression import dequantize_block
+        q, scale = enc.arrays
+        n = int(np.prod(enc.shape)) if enc.shape else 1
+        flat = np.asarray(dequantize_block(q, scale, n, block=self.block))
+        return flat.reshape(enc.shape)
+
+
+_REGISTRY: dict[str, ShuffleCodec] = {}
+
+
+def register_codec(codec: ShuffleCodec, *, overwrite: bool = False) -> ShuffleCodec:
+    """Add a codec instance to the registry under ``codec.name``."""
+    if codec.name in _REGISTRY and not overwrite:
+        raise ValueError(f"codec {codec.name!r} already registered")
+    _REGISTRY[codec.name] = codec
+    return codec
+
+
+def get_codec(codec: str | ShuffleCodec) -> ShuffleCodec:
+    """Resolve a codec by registry name (instances pass through)."""
+    if isinstance(codec, ShuffleCodec):
+        return codec
+    try:
+        return _REGISTRY[codec]
+    except KeyError:
+        raise KeyError(f"unknown shuffle codec {codec!r}; "
+                       f"available: {available_codecs()}") from None
+
+
+def available_codecs() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+register_codec(IdentityCodec())
+register_codec(Int16Codec())
+register_codec(Int8BlockCodec())

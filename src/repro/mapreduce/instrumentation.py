@@ -1,0 +1,74 @@
+"""Per-stage accounting for MapReduce jobs (the paper's Table 4, per job).
+
+The paper instruments each Hadoop task (map / shuffle / reduce) for
+instruction rate vs disk and network I/O and derives Amdahl numbers to name
+the bottleneck resource. ``StageStats`` is the per-job analogue: every
+``MapReduceJob`` run fills one, and ``roofline()`` recasts it as
+``core.amdahl.RooflineTerms`` so the same AD / ADN / dominant-resource
+analysis falls out of *any* job — not just the two hard-coded paper apps.
+
+Stage -> resource mapping:
+- map + reduce bytes  -> the memory term (HBM analogue of the paper's disk),
+- shuffle wire bytes  -> the collective term (the paper's network),
+- reduce FLOPs        -> the compute term.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.amdahl import RooflineTerms
+
+
+@dataclasses.dataclass
+class StageStats:
+    """Bytes, FLOPs, and wall time per MapReduce stage of one job run."""
+
+    job: str = ""
+    codec: str = "identity"
+    n_items: int = 0
+    n_partitions: int = 0
+    # map: key assignment + border replication (host side)
+    map_wall_s: float = 0.0
+    map_bytes: int = 0                 # input bytes read by the mappers
+    # shuffle: encode -> wire -> decode -> pad/stack
+    shuffle_wall_s: float = 0.0
+    shuffle_wire_bytes: int = 0        # bytes that crossed the shuffle
+    shuffle_raw_bytes: int = 0         # float32-equivalent (compression baseline)
+    # reduce: per-partition kernels + combine
+    reduce_wall_s: float = 0.0
+    reduce_flops: float = 0.0
+    reduce_bytes: int = 0              # bytes streamed by the reduce kernels
+
+    @property
+    def wall_s(self) -> float:
+        return self.map_wall_s + self.shuffle_wall_s + self.reduce_wall_s
+
+    @property
+    def compression_ratio(self) -> float:
+        """Raw/wire shuffle bytes (1.0 = identity, 2.0 = int16, ~4 = int8)."""
+        if not self.shuffle_wire_bytes:
+            return 1.0
+        return self.shuffle_raw_bytes / self.shuffle_wire_bytes
+
+    @property
+    def dominant_stage(self) -> str:
+        """Which stage dominated wall time (the paper's per-task breakdown)."""
+        times = {"map": self.map_wall_s, "shuffle": self.shuffle_wall_s,
+                 "reduce": self.reduce_wall_s}
+        return max(times, key=times.get)
+
+    def roofline(self, chips: int = 1) -> RooflineTerms:
+        """Recast as three-resource roofline terms (Amdahl-number analysis)."""
+        return RooflineTerms.from_stage_bytes(
+            flops=self.reduce_flops,
+            hbm_bytes=self.map_bytes + self.reduce_bytes,
+            wire_bytes=self.shuffle_wire_bytes,
+            chips=chips)
+
+    def to_dict(self, chips: int = 1) -> dict:
+        d = {f.name: getattr(self, f.name)
+             for f in dataclasses.fields(self)}
+        d.update(wall_s=self.wall_s, dominant_stage=self.dominant_stage,
+                 compression_ratio=self.compression_ratio)
+        d["amdahl"] = self.roofline(chips).to_dict()
+        return d

@@ -1,39 +1,81 @@
-"""Neighbor Statistics (the paper's compute-intensive app): pair-distance histogram.
+"""Neighbor Statistics (the paper's compute-intensive app) as a MapReduce job.
 
-Same map/shuffle as Neighbor Searching; reducers emit per-zone cumulative counts per
-angular edge (theta in {1..60 arcsec} by default), the combine step (the paper's second
-trivial MapReduce) psums and differentiates the cumulative counts.
+Same map/shuffle stages as Neighbor Searching (shared via ``ZonePartitioner``
+— batch both apps over one shuffle with ``run_jobs``); the reducer emits
+per-zone cumulative counts per angular edge, and ``finalize`` (the paper's
+second, trivial MapReduce) removes self pairs, halves the double count, and
+differentiates the cumulative counts into a histogram.
+
+``neighbor_statistics`` keeps the original signature as a deprecated wrapper
+over ``neighbor_statistics_job`` + ``run_job``.
 """
 from __future__ import annotations
+
+import dataclasses
+import warnings
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.data.sky import ARCSEC
 from repro.kernels.zones_pairs.ops import pair_hist
-from repro.mapreduce.api import bucket_by_zone, sharded_zone_reduce
+from repro.mapreduce.job import MapReduceJob, Reducer, ShuffledData, run_job
+from repro.mapreduce.zones import ZonePartitioner
+
+DEFAULT_EDGES_ARCSEC = tuple(float(e) for e in range(1, 61))
+
+
+@dataclasses.dataclass
+class PairHistReducer(Reducer):
+    """Cumulative per-edge pair counts per zone; finalize differentiates."""
+
+    edges_rad: tuple
+    use_pallas: bool | None = None
+
+    def per_partition(self, owned_p, bucket_p):
+        cos_edges = jnp.asarray(np.cos(np.asarray(self.edges_rad)),
+                                jnp.float32)
+        return pair_hist(owned_p, bucket_p, cos_edges,
+                         use_pallas=self.use_pallas)
+
+    def finalize(self, total, sd: ShuffledData):
+        cum = np.asarray(total).astype(np.int64)
+        cum -= int(sd.n_owned.sum())   # self pairs (theta=0) hit every edge
+        cum //= 2                      # each unordered pair seen twice
+        return np.diff(np.concatenate([[0], cum]))
+
+    def flops(self, sd: ShuffledData):
+        P, C1, _ = sd.owned.shape
+        return float(P) * C1 * sd.bucket.shape[1] * (6.0 + len(self.edges_rad))
+
+
+def neighbor_statistics_job(edges_arcsec=None, *, codec="identity",
+                            tile: int = 256,
+                            use_pallas: bool | None = None,
+                            partitioner: ZonePartitioner | None = None,
+                            ) -> MapReduceJob:
+    """The Neighbor Statistics app as a composable job. The partition radius
+    is the largest edge; pass a shared ``partitioner`` to batch with the
+    search job over one shuffle."""
+    if edges_arcsec is None:
+        edges_arcsec = DEFAULT_EDGES_ARCSEC
+    edges_rad = tuple(float(e) * ARCSEC for e in np.asarray(edges_arcsec))
+    part = partitioner or ZonePartitioner(edges_rad[-1])
+    return MapReduceJob("neighbor_statistics", part,
+                        PairHistReducer(edges_rad, use_pallas),
+                        codec=codec, tile=tile)
 
 
 def neighbor_statistics(xyz: np.ndarray, *, edges_arcsec=None, mesh=None,
                         compress_coords: bool = False,
                         use_pallas: bool | None = None,
                         tile: int = 256) -> np.ndarray:
-    """-> histogram over (0, e1], (e1, e2], ... in arcsec (unordered pairs)."""
-    if edges_arcsec is None:
-        edges_arcsec = np.arange(1, 61, dtype=np.float64)
-    edges_rad = np.asarray(edges_arcsec, np.float64) * ARCSEC
-    radius = float(edges_rad[-1])
-    pad_z = (mesh.shape["data"] if mesh is not None and
-             "data" in mesh.axis_names else 1)
-    zd = bucket_by_zone(xyz, radius, tile=tile,
-                        compress_coords=compress_coords, pad_zones_to=pad_z)
-    cos_edges = jnp.asarray(np.cos(edges_rad), jnp.float32)
-
-    def per_zone(owned_z, bucket_z):
-        return pair_hist(owned_z, bucket_z, cos_edges, use_pallas=use_pallas)
-
-    cum = np.asarray(sharded_zone_reduce(per_zone, zd, mesh)).astype(np.int64)
-    cum -= int(zd.n_owned.sum())          # self pairs (theta=0) hit every edge
-    cum //= 2                             # each unordered pair seen twice
-    hist = np.diff(np.concatenate([[0], cum]))
-    return hist
+    """Deprecated wrapper (use ``neighbor_statistics_job`` + ``run_job``):
+    histogram over (0, e1], (e1, e2], ... in arcsec (unordered pairs)."""
+    warnings.warn("neighbor_statistics is deprecated; build a job with "
+                  "neighbor_statistics_job() and execute it with run_job()",
+                  DeprecationWarning, stacklevel=2)
+    job = neighbor_statistics_job(
+        edges_arcsec, tile=tile, use_pallas=use_pallas,
+        codec="int16" if compress_coords else "identity")
+    return run_job(job, xyz, mesh=mesh).output

@@ -1,41 +1,114 @@
-"""Neighbor Searching (the paper's data-intensive app): all pairs within theta.
+"""Neighbor Searching (the paper's data-intensive app) as a MapReduce job.
 
-Zones algorithm [Gray/Nieto-Santisteban/Szalay, MSR-TR-2006-52]: zone buckets are
-self-contained (borders replicated), so each zone's pairs are found independently by
-the blockwise pair kernel. Every within-radius unordered pair (p, q) is seen exactly
-twice across zones (once from each endpoint's own zone), plus each owned point sees
-itself once; the final count corrects for both.
+Zones algorithm [Gray/Nieto-Santisteban/Szalay, MSR-TR-2006-52]: declination
+bands with border replication make each zone bucket self-contained, so a
+blockwise pair kernel reduces every zone independently. Every within-radius
+unordered pair (p, q) is seen exactly twice across zones (once from each
+endpoint's own zone), plus each owned point sees itself once; ``finalize``
+corrects for both.
+
+This module is now a thin definition on the composable Job API
+(``mapreduce/job.py``): ``ZonePartitioner`` is the map-stage plugin (zone
+assignment + border-replication policy), ``PairCountReducer`` the
+reduce-stage plugin, and ``neighbor_search_job`` wires them together with any
+registered shuffle codec. ``neighbor_search_count`` keeps the original
+signature as a deprecated wrapper.
 """
 from __future__ import annotations
 
-import functools
+import dataclasses
+import warnings
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.data import sky
-from repro.kernels.zones_pairs.ops import pair_count, pair_hist
-from repro.mapreduce.api import ZonedData, bucket_by_zone, sharded_zone_reduce
+from repro.kernels.zones_pairs.ops import pair_count
+from repro.mapreduce.job import (MapReduceJob, Partitioner, Reducer,
+                                 ShuffledData, run_job)
+
+
+@dataclasses.dataclass
+class ZonePartitioner(Partitioner):
+    """Declination bands of height ``zone_height`` (default: the radius —
+    the paper's "always favor larger blocks" choice, so border copies come
+    only from adjacent zones). Points within ``radius`` of a band edge are
+    replicated into the neighboring band's bucket."""
+
+    radius: float
+    zone_height: float = 0.0
+
+    @property
+    def height(self) -> float:
+        return self.zone_height or max(self.radius, 1e-4)
+
+    def n_partitions(self, items):
+        return sky.n_zones(self.height)
+
+    def assign(self, items):
+        dec = sky.dec_of(items)
+        Z = self.n_partitions(items)
+        return np.clip(((dec + np.pi / 2) / self.height).astype(np.int32),
+                       0, Z - 1)
+
+    def replicas(self, items, keys, n_parts):
+        h = self.height
+        dec = sky.dec_of(items)
+        lo_edge = (dec - (keys * h - np.pi / 2)) <= self.radius
+        hi_edge = (((keys + 1) * h - np.pi / 2) - dec) <= self.radius
+        for k in range(n_parts):
+            if k > 0:
+                yield k - 1, np.flatnonzero((keys == k) & lo_edge)
+            if k + 1 < n_parts:
+                yield k + 1, np.flatnonzero((keys == k) & hi_edge)
+
+
+@dataclasses.dataclass
+class PairCountReducer(Reducer):
+    """Blockwise within-radius pair count per zone; finalize removes self
+    pairs and the double-count."""
+
+    radius: float
+    use_pallas: bool | None = None
+
+    def per_partition(self, owned_p, bucket_p):
+        return pair_count(owned_p, bucket_p, float(np.cos(self.radius)),
+                          use_pallas=self.use_pallas)
+
+    def finalize(self, total, sd: ShuffledData):
+        return (int(total) - int(sd.n_owned.sum())) // 2
+
+    def flops(self, sd: ShuffledData):
+        # per zone: C1*C2 dot products (2*3 FLOPs) + compares
+        P, C1, _ = sd.owned.shape
+        return float(P) * C1 * sd.bucket.shape[1] * 8.0
+
+
+def neighbor_search_job(radius_rad: float, *, zone_height: float = 0.0,
+                        codec="identity", tile: int = 256,
+                        use_pallas: bool | None = None,
+                        partitioner: ZonePartitioner | None = None,
+                        ) -> MapReduceJob:
+    """The Neighbor Searching app as a composable job. Pass ``partitioner``
+    explicitly to batch it with other jobs over one shuffle (``run_jobs``)."""
+    part = partitioner or ZonePartitioner(radius_rad, zone_height)
+    return MapReduceJob("neighbor_search", part,
+                        PairCountReducer(radius_rad, use_pallas),
+                        codec=codec, tile=tile)
 
 
 def neighbor_search_count(xyz: np.ndarray, radius_rad: float, *, mesh=None,
                           compress_coords: bool = False,
                           use_pallas: bool | None = None,
                           tile: int = 256, zone_height: float = 0.0) -> int:
-    """Total number of unordered neighbor pairs within radius."""
-    pad_z = (mesh.shape["data"] if mesh is not None and
-             "data" in mesh.axis_names else 1)
-    zd = bucket_by_zone(xyz, radius_rad, tile=tile, zone_height=zone_height,
-                        compress_coords=compress_coords, pad_zones_to=pad_z)
-    cmin = float(np.cos(radius_rad))
-
-    def per_zone(owned_z, bucket_z):
-        return pair_count(owned_z, bucket_z, cmin, use_pallas=use_pallas)
-
-    total = int(sharded_zone_reduce(per_zone, zd, mesh))
-    n_self = int(zd.n_owned.sum())
-    return (total - n_self) // 2
+    """Deprecated wrapper (use ``neighbor_search_job`` + ``run_job``):
+    total number of unordered neighbor pairs within radius."""
+    warnings.warn("neighbor_search_count is deprecated; build a job with "
+                  "neighbor_search_job() and execute it with run_job()",
+                  DeprecationWarning, stacklevel=2)
+    job = neighbor_search_job(radius_rad, zone_height=zone_height,
+                              codec="int16" if compress_coords else "identity",
+                              tile=tile, use_pallas=use_pallas)
+    return run_job(job, xyz, mesh=mesh).output
 
 
 def neighbor_pairs_dense(xyz: np.ndarray, radius_rad: float):

@@ -285,7 +285,8 @@ def moe_apply(cfg: ArchConfig, p: dict, x, bias, *, compress_a2a: bool = False):
     manual = {a for a in (("model",) if ex_ax else ()) + tuple(ba) + tuple(eff)}
     body = functools.partial(_moe_body, cfg, compress_a2a, tuple(ba), tuple(eff))
     tp_size = mesh.shape["model"] if "model" in mesh.axis_names else 1
-    y, load, aux = jax.shard_map(
+    from repro.core.compat import shard_map as shard_map_compat
+    y, load, aux = shard_map_compat(
         body,
         mesh=sharding_mesh(),
         in_specs=(tok_spec, P(None, None), P(None),
@@ -293,7 +294,6 @@ def moe_apply(cfg: ArchConfig, p: dict, x, bias, *, compress_a2a: bool = False):
                   P(ex_ax, eff_s, None), P(ex_ax)),
         out_specs=(tok_spec, P(None), P()),
         axis_names=frozenset(manual),
-        check_vma=False,
     )(xt, p["router"], bias, p["w_gate"], p["w_up"], p["w_down"],
       jnp.arange(max(tp_size, 1), dtype=jnp.int32))
     y = y.reshape(B, S, D)

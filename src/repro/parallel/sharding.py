@@ -192,7 +192,8 @@ def sharding_mesh():
     concrete mesh.
     """
     if _CTX.manual:
-        am = jax.sharding.get_abstract_mesh()
+        get_am = getattr(jax.sharding, "get_abstract_mesh", None)
+        am = get_am() if get_am is not None else None   # older jax: no ambient
         if am is not None and am.axis_names:
             return am
     return _CTX.mesh

@@ -188,12 +188,12 @@ def make_train_step(cfg: ArchConfig, rc: RunConfig, mesh):
             st_specs = jax.tree.map(lambda _: P(), state)
             batch_specs = jax.tree.map(
                 lambda x: P(dp, *([None] * (x.ndim - 1))), batch)
-            return jax.shard_map(
+            from repro.core.compat import shard_map as shard_map_compat
+            return shard_map_compat(
                 body, mesh=mesh,
                 in_specs=(st_specs, batch_specs),
                 out_specs=(jax.tree.map(lambda _: P(), state), P()),
                 axis_names=frozenset(dp_axes),
-                check_vma=False,
             )(state, batch)
 
     # jit with shardings + donation (the paper's direct-I/O analogue)

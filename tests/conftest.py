@@ -17,8 +17,8 @@ import pytest  # noqa: E402
 
 @pytest.fixture(scope="session")
 def cpu_mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.core.compat import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
 
 
 @pytest.fixture()

@@ -16,9 +16,11 @@ import numpy as np              # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 
+from repro.core.compat import make_mesh, shard_map  # noqa: E402
+
+
 def mesh3():
-    return jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return make_mesh((2, 2, 2), ("pod", "data", "model"))
 
 
 def check_hierarchical_psum():
@@ -34,9 +36,9 @@ def check_hierarchical_psum():
 
     kw = dict(mesh=mesh, in_specs=P(("pod", "data")),
               out_specs=P(("pod", "data")),
-              axis_names=frozenset({"pod", "data"}), check_vma=False)
-    o1 = jax.jit(jax.shard_map(flat, **kw))(x)
-    o2 = jax.jit(jax.shard_map(hier, **kw))(x)
+              axis_names=frozenset({"pod", "data"}))
+    o1 = jax.jit(shard_map(flat, **kw))(x)
+    o2 = jax.jit(shard_map(hier, **kw))(x)
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-6)
     print("hierarchical == flat psum OK")
 
@@ -55,9 +57,9 @@ def check_compressed_psum():
 
     spec = P(("pod", "data"))
     kw = dict(mesh=mesh, in_specs=spec, out_specs=spec,
-              axis_names=frozenset({"pod", "data"}), check_vma=False)
-    o1 = jax.jit(jax.shard_map(flat, **kw))(x)
-    o2 = jax.jit(jax.shard_map(comp, **kw))(x)
+              axis_names=frozenset({"pod", "data"}))
+    o1 = jax.jit(shard_map(flat, **kw))(x)
+    o2 = jax.jit(shard_map(comp, **kw))(x)
     err = np.abs(np.asarray(o1) - np.asarray(o2)).max()
     scale = np.abs(np.asarray(o1)).max()
     assert err <= scale * 0.03, (err, scale)
@@ -74,10 +76,8 @@ def check_moe_multidevice():
     cfg = dataclasses.replace(
         cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0,
                                      chunk_tokens=64))
-    mesh1 = jax.make_mesh((1, 1), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    mesh8 = jax.make_mesh((4, 2), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh1 = make_mesh((1, 1), ("data", "model"))
+    mesh8 = make_mesh((4, 2), ("data", "model"))
     rng = jax.random.PRNGKey(0)
     x = jax.random.normal(rng, (4, 16, cfg.d_model), jnp.float32) * 0.5
     bias = jnp.zeros((cfg.moe.n_experts_padded,), jnp.float32)
@@ -121,11 +121,42 @@ def check_train_step_sharded():
     print(f"train modes OK: {losses}")
 
 
+def check_mapreduce_sharded():
+    """Job engine: sharded-mesh results == mesh=None results, for both paper
+    apps (batched over one shuffle) and the wordcount job."""
+    from repro.data import sky
+    from repro.mapreduce import (ZonePartitioner, neighbor_search_job,
+                                 neighbor_statistics_job, run_jobs,
+                                 token_histogram)
+    mesh = make_mesh((4, 2), ("data", "model"))
+    xyz = sky.make_catalog(1200, 7)
+    radius = 0.1
+    part = ZonePartitioner(radius)
+    edges = np.linspace(0.02, radius, 5)
+    jobs = [neighbor_search_job(radius, partitioner=part, tile=64),
+            neighbor_statistics_job(edges / sky.ARCSEC, partitioner=part,
+                                    tile=64)]
+    r1 = run_jobs(jobs, xyz, mesh=None)
+    r8 = run_jobs(jobs, xyz, mesh=mesh)
+    assert r1[0].output == r8[0].output, (r1[0].output, r8[0].output)
+    np.testing.assert_array_equal(r1[1].output, r8[1].output)
+    assert r8[0].output == sky.brute_force_pairs(xyz, radius)
+
+    toks = np.random.default_rng(1).integers(0, 500, 4000)
+    h1 = token_histogram(toks, 500, n_partitions=8, tile=64).output
+    h8 = token_histogram(toks, 500, n_partitions=8, tile=64,
+                         mesh=mesh).output
+    np.testing.assert_array_equal(h1, h8)
+    np.testing.assert_array_equal(h1, np.bincount(toks, minlength=500))
+    print("mapreduce sharded == single-device OK")
+
+
 if __name__ == "__main__":
     checks = {
         "hier": check_hierarchical_psum,
         "compressed": check_compressed_psum,
         "moe": check_moe_multidevice,
         "train": check_train_step_sharded,
+        "mapreduce": check_mapreduce_sharded,
     }
     checks[sys.argv[1]]()

@@ -1,0 +1,206 @@
+"""Job API properties: codec contracts, engine parity, wrapper/oracle
+agreement, multi-job batching, and StageStats -> Amdahl accounting."""
+import os
+import subprocess
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.data import sky
+from repro.mapreduce import (HashPartitioner, MapReduceJob, ZonePartitioner,
+                             available_codecs, get_codec,
+                             neighbor_pairs_dense, neighbor_search_count,
+                             neighbor_search_job, neighbor_statistics,
+                             neighbor_statistics_job, run_job, run_jobs,
+                             token_histogram)
+from repro.mapreduce.codecs import Int16Codec
+
+
+# ---------------------------------------------------------------------------
+# ShuffleCodec contracts (property-style sweep over the registry)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(available_codecs()))
+@pytest.mark.parametrize("n,d,seed", [(1, 1, 0), (7, 3, 1), (256, 3, 2),
+                                      (1000, 3, 3), (513, 2, 4)])
+def test_codec_roundtrip_within_tolerance(name, n, d, seed):
+    codec = get_codec(name)
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1.0, 1.0, (n, d)).astype(np.float32)
+    back = codec.roundtrip(x)
+    assert back.shape == x.shape
+    err = np.max(np.abs(back - x))
+    assert err <= codec.error_bound(x) + 1e-7, (name, err)
+
+
+@pytest.mark.parametrize("name", sorted(available_codecs()))
+def test_codec_wire_bytes_accounting(name):
+    """encode() payload bytes == the static nbytes() formula the engine uses."""
+    codec = get_codec(name)
+    for n in (1, 255, 256, 257, 4096):
+        x = np.linspace(-1, 1, n, dtype=np.float32)
+        enc = codec.encode(x)
+        assert enc.wire_bytes == codec.nbytes(n), (name, n)
+        assert sum(a.nbytes for a in enc.arrays) == enc.wire_bytes, (name, n)
+
+
+def test_codec_relative_sizes():
+    """identity : int16 : int8 wire bytes ~= 4 : 2 : 1 (+ scale overhead)."""
+    n = 3 * 4096
+    idn = get_codec("identity").nbytes(n)
+    i16 = get_codec("int16").nbytes(n)
+    i8 = get_codec("int8").nbytes(n)
+    assert idn == 4 * n and idn == 2 * i16
+    assert i8 < i16 < idn
+    assert i8 == n + 4 * (n // 256)        # int8 codes + one fp32 scale/block
+
+
+def test_codec_registry_rejects_unknown():
+    with pytest.raises(KeyError):
+        get_codec("lzo")
+
+
+def test_int8_codec_custom_block_roundtrips():
+    from repro.mapreduce.codecs import Int8BlockCodec
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(300,)).astype(np.float32)   # not a block multiple
+    for block in (64, 128, 512):
+        codec = Int8BlockCodec(block=block)
+        back = codec.roundtrip(x)
+        assert np.max(np.abs(back - x)) <= codec.error_bound(x) + 1e-7
+        assert codec.encode(x).wire_bytes == codec.nbytes(x.size)
+
+
+# ---------------------------------------------------------------------------
+# Engine: jobs vs oracles, batching, codecs interchangeable
+# ---------------------------------------------------------------------------
+
+def test_search_job_matches_oracle_all_codecs():
+    """Codecs are interchangeable; count error tracks each codec's error
+    bound (identity exact; int16 ~1/32767/coord; int8 ~1/127/coord, so it
+    needs a radius well above its quantization step)."""
+    xyz = sky.make_catalog(700, 11)
+    for codec, radius, rel_tol in [("identity", 0.06, 0.0),
+                                   ("int16", 0.06, 0.02),
+                                   ("int8", 0.2, 0.05)]:
+        want = sky.brute_force_pairs(xyz, radius)
+        got = run_job(neighbor_search_job(radius, codec=codec, tile=64),
+                      xyz).output
+        assert abs(got - want) <= max(3 * bool(rel_tol), rel_tol * want), (
+            codec, got, want)
+
+
+def test_batched_jobs_share_one_shuffle():
+    xyz = sky.make_catalog(600, 2)
+    edges = np.linspace(0.02, 0.1, 5)
+    part = ZonePartitioner(float(edges[-1]))
+    jobs = [neighbor_search_job(float(edges[-1]), partitioner=part, tile=64),
+            neighbor_statistics_job(edges / sky.ARCSEC, partitioner=part,
+                                    tile=64)]
+    rs = run_jobs(jobs, xyz)
+    assert rs[0].output == sky.brute_force_pairs(xyz, float(edges[-1]))
+    np.testing.assert_array_equal(
+        rs[1].output, sky.brute_force_hist(xyz, np.concatenate([[0], edges])))
+    assert rs[0].stats is rs[1].stats          # one shuffle, shared stats
+    assert rs[0].stats.job == "neighbor_search+neighbor_statistics"
+
+
+def test_batched_jobs_reject_mismatched_stages():
+    with pytest.raises(ValueError):
+        run_jobs([neighbor_search_job(0.1, tile=64),
+                  neighbor_search_job(0.1, tile=128)],
+                 sky.make_catalog(50, 0))
+
+
+def test_wordcount_matches_bincount_and_compresses():
+    toks = np.random.default_rng(3).integers(0, 700, 6000)
+    want = np.bincount(toks, minlength=700)
+    r_id = token_histogram(toks, 700, tile=64)
+    r_16 = token_histogram(toks, 700, codec="int16", tile=64)
+    np.testing.assert_array_equal(r_id.output, want)
+    np.testing.assert_array_equal(r_16.output, want)   # lossless: vocab < 32767
+    assert r_16.stats.shuffle_wire_bytes * 2 == r_id.stats.shuffle_wire_bytes
+
+
+def test_custom_job_composition():
+    """A from-scratch job (hash partitioner + custom reducer) runs on the
+    same engine: partition-sum of squares == global sum of squares."""
+    import jax.numpy as jnp
+    from repro.mapreduce import Reducer
+
+    class SumSquares(Reducer):
+        def per_partition(self, owned_p, bucket_p):
+            return jnp.sum(owned_p[:, 0] ** 2)
+
+    vals = np.arange(1, 501, dtype=np.float32)
+    job = MapReduceJob("sumsq", HashPartitioner(4), SumSquares(), tile=32)
+    got = float(run_job(job, vals).output)
+    assert np.isclose(got, float(np.sum(vals ** 2)), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# StageStats -> RooflineTerms
+# ---------------------------------------------------------------------------
+
+def test_stage_stats_feed_roofline():
+    xyz = sky.make_catalog(500, 4)
+    res = run_job(neighbor_search_job(0.08, codec="int16", tile=64), xyz)
+    st = res.stats
+    assert st.n_items == 500 and st.codec == "int16"
+    assert st.shuffle_wire_bytes > 0
+    assert st.compression_ratio == pytest.approx(2.0)
+    assert st.reduce_flops > 0 and st.reduce_bytes > 0
+    assert st.dominant_stage in ("map", "shuffle", "reduce")
+    terms = st.roofline(chips=1)
+    d = terms.to_dict()                        # the paper's Table-4 columns
+    for key in ("AD", "ADN", "dominant", "chips_to_balance"):
+        assert key in d
+    full = st.to_dict()
+    assert full["amdahl"]["flops"] == st.reduce_flops
+
+
+# ---------------------------------------------------------------------------
+# Deprecated wrappers: old signatures still work and match the dense oracle
+# ---------------------------------------------------------------------------
+
+def test_deprecated_wrappers_match_dense_oracle():
+    for seed, n, radius in [(0, 300, 0.05), (1, 500, 0.1), (2, 200, 0.2)]:
+        xyz = sky.make_catalog(n, seed)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            got = neighbor_search_count(xyz, radius, tile=64)
+        assert got == len(neighbor_pairs_dense(xyz, radius))
+
+    xyz = sky.make_catalog(400, 5)
+    edges_rad = np.linspace(0.02, 0.12, 6)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        h = neighbor_statistics(xyz, edges_arcsec=edges_rad / sky.ARCSEC,
+                                tile=64)
+    np.testing.assert_array_equal(
+        h, sky.brute_force_hist(xyz, np.concatenate([[0], edges_rad])))
+
+
+def test_wrappers_warn_deprecation():
+    xyz = sky.make_catalog(60, 0)
+    with pytest.warns(DeprecationWarning):
+        neighbor_search_count(xyz, 0.1, tile=64)
+    with pytest.warns(DeprecationWarning):
+        neighbor_statistics(xyz, edges_arcsec=[10.0, 20.0], tile=64)
+
+
+# ---------------------------------------------------------------------------
+# Mesh parity (8 host devices, via subprocess like test_multidevice.py)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_sharded_mesh_matches_single_device():
+    script = os.path.join(os.path.dirname(__file__), "md_check.py")
+    env = dict(os.environ)
+    env.pop("JAX_PLATFORMS", None)
+    r = subprocess.run([sys.executable, script, "mapreduce"],
+                       capture_output=True, text=True, timeout=900, env=env)
+    assert r.returncode == 0, f"mapreduce check failed:\n{r.stdout}\n{r.stderr}"
+    assert "OK" in r.stdout

@@ -1,6 +1,8 @@
 """Zones MapReduce apps vs brute-force oracles (hypothesis over catalogs)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")   # optional dev dependency
 from hypothesis import given, settings, strategies as st
 
 from repro.data import sky
