@@ -1,0 +1,74 @@
+#!/usr/bin/env python
+"""Diff two BENCH_*.json snapshots and flag per-row regressions.
+
+For every row name present in both snapshots, prints the ``us_per_call``
+ratio (new/old); rows slower than ``--threshold`` (default 1.15x) are
+flagged and make the script exit 1, so CI can gate on it:
+
+    python scripts/bench_diff.py BENCH_pr1.json BENCH_pr2.json --prefix fig3
+
+Rows with a zero/absent timing on either side (derived-only rows like
+table2, rows that disappeared) are reported but never gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict[str, float]:
+    with open(path) as f:
+        snap = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in snap["rows"]}
+
+
+def diff(old: dict[str, float], new: dict[str, float], *, prefix: str = "",
+         threshold: float = 1.15):
+    """-> (report_lines, regressions) for rows matching ``prefix``."""
+    names = [n for n in sorted(set(old) | set(new)) if n.startswith(prefix)]
+    lines, regressions = [], []
+    for name in names:
+        o, n = old.get(name), new.get(name)
+        if o is None or n is None:
+            lines.append(f"{name:40s} {'added' if o is None else 'removed'}")
+            continue
+        if not o or not n:
+            lines.append(f"{name:40s} untimed (old={o:.1f} new={n:.1f})")
+            continue
+        ratio = n / o
+        flag = ""
+        if ratio > threshold:
+            flag = f"  REGRESSION (> {threshold:.2f}x)"
+            regressions.append((name, ratio))
+        lines.append(f"{name:40s} {o:12.1f} -> {n:12.1f} us"
+                     f"  ({ratio:5.2f}x){flag}")
+    return lines, regressions
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("old", help="baseline BENCH_*.json")
+    ap.add_argument("new", help="candidate BENCH_*.json")
+    ap.add_argument("--prefix", default="",
+                    help="only compare rows whose name starts with this")
+    ap.add_argument("--threshold", type=float, default=1.15,
+                    help="flag rows slower than this new/old ratio")
+    args = ap.parse_args()
+    lines, regressions = diff(load_rows(args.old), load_rows(args.new),
+                              prefix=args.prefix, threshold=args.threshold)
+    print(f"bench diff: {args.old} -> {args.new}"
+          + (f" (prefix={args.prefix!r})" if args.prefix else ""))
+    for ln in lines:
+        print("  " + ln)
+    if regressions:
+        worst = max(regressions, key=lambda r: r[1])
+        print(f"{len(regressions)} regression(s); worst: "
+              f"{worst[0]} at {worst[1]:.2f}x")
+        return 1
+    print("no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,6 +8,13 @@ the reducer should never write O(n^2) intermediates.
 
 Grid is (M/TM, N/TN); per-tile partial results land in an [gm, gn] (or [gm, gn, NB])
 output that the caller sums — keeping the kernel free of cross-tile accumulation.
+
+The ``*_masked_pallas`` variants add a leading *partition* grid axis
+(grid ``(P, M/TM, N/TN)``) with per-partition real counts ``n_a``/``n_b``:
+rows/cols beyond the real count are masked out in-kernel, so capacity padding
+contributes zero regardless of the pad fill — the engine="device" batched
+reduce runs every partition of a size tier in ONE kernel launch instead of a
+sequential ``lax.map``.
 """
 from __future__ import annotations
 
@@ -61,7 +68,8 @@ def _hist_kernel(a_ref, b_ref, edges_ref, o_ref, *, exclude_self: bool):
 
 def _pad3(x):
     """Pad the coordinate dim 3 -> 128 (lane alignment); zeros don't affect dots."""
-    return jnp.pad(x, ((0, 0), (0, 125)))
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, 128 - x.shape[-1])]
+    return jnp.pad(x, pad)
 
 
 def pair_count_pallas(a, b, cos_min, *, exclude_self: bool = False,
@@ -100,3 +108,106 @@ def pair_hist_pallas(a, b, cos_edges, *, exclude_self: bool = False,
         interpret=interpret,
     )(_pad3(a), _pad3(b), jnp.asarray(cos_edges, jnp.float32))
     return jnp.sum(out, axis=(0, 1), dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Masked-batched variants: leading partition grid axis + n_a/n_b masking
+# ---------------------------------------------------------------------------
+
+def _fit_tile(C: int, t: int) -> int:
+    """Largest divisor of C that is <= t — keeps VMEM blocks bounded even
+    when a tier capacity isn't a multiple of the default tile (a whole-axis
+    fallback would materialize an [C, C] score tile)."""
+    t = min(t, C)
+    while C % t:
+        t -= 1
+    return t
+
+
+def _tile_validity(na, nb, i, j, tm, tn):
+    """[tm, tn] bool: (row, col) is a real (non-padded) pair of this tile."""
+    ri = jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 0) + i * tm
+    rj = jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 1) + j * tn
+    return (ri < na) & (rj < nb)
+
+
+def _count_masked_kernel(a_ref, b_ref, cmin_ref, na_ref, nb_ref, o_ref):
+    i, j = pl.program_id(1), pl.program_id(2)
+    a = a_ref[0].astype(jnp.float32)                # [tm, 128]
+    b = b_ref[0].astype(jnp.float32)                # [tn, 128]
+    o_ref[0, 0, 0] = 0
+
+    @pl.when((pl.program_id(1) * a.shape[0] < na_ref[0])
+             & (pl.program_id(2) * b.shape[0] < nb_ref[0]))
+    def _():                                        # skip all-padding tiles
+        dots = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+        ok = (dots >= cmin_ref[0]) & _tile_validity(
+            na_ref[0], nb_ref[0], i, j, *dots.shape)
+        o_ref[0, 0, 0] = jnp.sum(ok.astype(jnp.int32))
+
+
+def _hist_masked_kernel(a_ref, b_ref, edges_ref, na_ref, nb_ref, o_ref):
+    i, j = pl.program_id(1), pl.program_id(2)
+    a = a_ref[0].astype(jnp.float32)
+    b = b_ref[0].astype(jnp.float32)
+    dots = jax.lax.dot_general(a, b, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    dots = jnp.where(_tile_validity(na_ref[0], nb_ref[0], i, j, *dots.shape),
+                     dots, -2.0)
+    edges = edges_ref[...]                           # [NB]
+
+    def bin_body(k, _):
+        o_ref[0, 0, 0, k] = jnp.sum((dots >= edges[k]).astype(jnp.int32))
+        return 0
+
+    jax.lax.fori_loop(0, edges.shape[0], bin_body, 0)
+
+
+def pair_count_masked_pallas(a, b, n_a, n_b, cos_min, *, tm: int = TM,
+                             tn: int = TN, interpret: bool = False):
+    """a: [P,M,3], b: [P,N,3] (any float dtype), n_a/n_b: [P] int32 real
+    counts. -> total masked pair count (scalar int32)."""
+    P, M, _ = a.shape
+    N = b.shape[1]
+    tm, tn = _fit_tile(M, tm), _fit_tile(N, tn)
+    gm, gn = M // tm, N // tn
+    cmin = jnp.full((1,), cos_min, jnp.float32)
+    out = pl.pallas_call(
+        _count_masked_kernel,
+        grid=(P, gm, gn),
+        in_specs=[pl.BlockSpec((1, tm, 128), lambda p, i, j: (p, i, 0)),
+                  pl.BlockSpec((1, tn, 128), lambda p, i, j: (p, j, 0)),
+                  pl.BlockSpec((1,), lambda p, i, j: (0,)),
+                  pl.BlockSpec((1,), lambda p, i, j: (p,)),
+                  pl.BlockSpec((1,), lambda p, i, j: (p,))],
+        out_specs=pl.BlockSpec((1, 1, 1), lambda p, i, j: (p, i, j)),
+        out_shape=jax.ShapeDtypeStruct((P, gm, gn), jnp.int32),
+        interpret=interpret,
+    )(_pad3(a), _pad3(b), cmin, jnp.asarray(n_a, jnp.int32),
+      jnp.asarray(n_b, jnp.int32))
+    return jnp.sum(out, dtype=jnp.int32)
+
+
+def pair_hist_masked_pallas(a, b, n_a, n_b, cos_edges, *, tm: int = TM,
+                            tn: int = TN, interpret: bool = False):
+    """Masked-batched cumulative per-edge counts, summed over partitions."""
+    P, M, _ = a.shape
+    N = b.shape[1]
+    tm, tn = _fit_tile(M, tm), _fit_tile(N, tn)
+    gm, gn = M // tm, N // tn
+    nbins = cos_edges.shape[0]
+    out = pl.pallas_call(
+        _hist_masked_kernel,
+        grid=(P, gm, gn),
+        in_specs=[pl.BlockSpec((1, tm, 128), lambda p, i, j: (p, i, 0)),
+                  pl.BlockSpec((1, tn, 128), lambda p, i, j: (p, j, 0)),
+                  pl.BlockSpec((nbins,), lambda p, i, j: (0,)),
+                  pl.BlockSpec((1,), lambda p, i, j: (p,)),
+                  pl.BlockSpec((1,), lambda p, i, j: (p,))],
+        out_specs=pl.BlockSpec((1, 1, 1, nbins), lambda p, i, j: (p, i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((P, gm, gn, nbins), jnp.int32),
+        interpret=interpret,
+    )(_pad3(a), _pad3(b), jnp.asarray(cos_edges, jnp.float32),
+      jnp.asarray(n_a, jnp.int32), jnp.asarray(n_b, jnp.int32))
+    return jnp.sum(out, axis=(0, 1, 2), dtype=jnp.int32)

@@ -6,7 +6,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.zones_pairs.kernel import pair_count_pallas, pair_hist_pallas
+from repro.kernels.zones_pairs.kernel import (pair_count_masked_pallas,
+                                              pair_count_pallas,
+                                              pair_hist_masked_pallas,
+                                              pair_hist_pallas)
 from repro.kernels.zones_pairs.ref import pair_count_ref, pair_hist_ref
 
 
@@ -34,3 +37,33 @@ def pair_hist(a, b, cos_edges, *, exclude_self: bool = False,
         return pair_hist_pallas(a, b, cos_edges, exclude_self=exclude_self,
                                 interpret=not _on_tpu())
     return pair_hist_ref(a, b, cos_edges, exclude_self=exclude_self)
+
+
+# Masked-batched variants (the engine="device" reduce): one call covers a
+# whole size tier of partitions; padded rows are masked via n_a/n_b, never
+# via pad-value tricks. On TPU: Pallas kernels with a leading partition grid
+# axis. Elsewhere: the z-banded blocked reduce (``blocked.py``) — same
+# results, tile pairs outside the z band pruned, fixed-shape chunks so the
+# XLA compile is shared across codecs, radii, and job shapes. These run
+# eagerly (the blocked path plans its blocks on the host), NOT under jit.
+
+def pair_count_masked(a, b, n_a, n_b, cos_min, *,
+                      use_pallas: bool | None = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return pair_count_masked_pallas(a, b, n_a, n_b, cos_min,
+                                        interpret=not _on_tpu())
+    from repro.kernels.zones_pairs.blocked import pair_count_blocked
+    return pair_count_blocked(a, b, n_a, n_b, cos_min)
+
+
+def pair_hist_masked(a, b, n_a, n_b, cos_edges, *,
+                     use_pallas: bool | None = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return pair_hist_masked_pallas(a, b, n_a, n_b, cos_edges,
+                                       interpret=not _on_tpu())
+    from repro.kernels.zones_pairs.blocked import pair_hist_blocked
+    return pair_hist_blocked(a, b, n_a, n_b, cos_edges)

@@ -12,8 +12,9 @@ from repro.mapreduce.codecs import (EncodedShuffle, IdentityCodec,
                                     available_codecs, get_codec,
                                     register_codec)
 from repro.mapreduce.instrumentation import StageStats
-from repro.mapreduce.job import (HashPartitioner, JobResult, MapReduceJob,
-                                 Partitioner, Reducer, ShuffledData,
+from repro.mapreduce.job import (DeviceShuffledData, HashPartitioner,
+                                 JobResult, MapReduceJob, Partitioner,
+                                 Reducer, ShuffledData, TierData, plan_tiers,
                                  reduce_stage, run_job, run_jobs,
                                  shuffle_stage)
 from repro.mapreduce.zones import (PairCountReducer, ZonePartitioner,

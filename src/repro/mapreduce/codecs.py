@@ -19,6 +19,17 @@ Contract (property-checked in ``tests/test_mapreduce_job.py``):
 - ``encode(x).wire_bytes == nbytes(x.size)`` — the static accounting formula
   and the actual payload agree, so ``StageStats.shuffle_wire_bytes`` can be
   computed per-bucket without materializing per-bucket payloads.
+
+Device side (the ``engine="device"`` hot path in ``job.py``): every codec also
+provides jax transforms ``encode_device(x) -> wire arrays`` and
+``decode_device(*wire) -> float32``, so the shuffle can scatter payloads in
+the *wire dtype* (int16/int8) and fuse the decode into the jitted reduce —
+shuffle traffic then actually shrinks with the codec ratio instead of only
+being counted smaller. ``identity``/``int16`` device transforms are bit-exact
+matches of the host encode/decode; ``int8`` trades the host path's
+cross-row block scales for per-row scales (same error bound, but a
+row-independent layout the scatter can move), so its device results differ
+from the host path within ``error_bound``.
 """
 from __future__ import annotations
 
@@ -40,6 +51,7 @@ class ShuffleCodec:
     """Interface: encode/decode + byte accounting. Subclass and register."""
 
     name: str = "base"
+    exact: bool = False        # True iff decode(encode(x)) == x bit-for-bit
 
     def nbytes(self, n_elements: int) -> int:
         """Wire bytes for a payload of ``n_elements`` scalars."""
@@ -57,13 +69,33 @@ class ShuffleCodec:
 
     def roundtrip(self, x: np.ndarray) -> np.ndarray:
         """What the reducers see after the payload crosses the shuffle."""
+        if self.exact:
+            return np.asarray(x, np.float32)   # skip the no-op wire trip
         return self.decode(self.encode(np.asarray(x, np.float32)))
+
+    # -- device (jax) transforms: the engine="device" wire format ----------
+    # encode_device returns a tuple of arrays whose leading axis is the item
+    # axis; the shuffle scatters each of them, and decode_device runs inside
+    # the jitted reduce (works on any [..., d] wire layout).
+
+    def encode_device(self, x):
+        raise NotImplementedError
+
+    def decode_device(self, *wire):
+        raise NotImplementedError
+
+    def device_bytes_per_item(self, d: int) -> int:
+        """Wire bytes one [d]-item row occupies on the device shuffle."""
+        import jax.numpy as jnp
+        wire = self.encode_device(jnp.zeros((1, d), jnp.float32))
+        return sum(int(np.prod(w.shape[1:])) * w.dtype.itemsize for w in wire)
 
 
 class IdentityCodec(ShuffleCodec):
     """float32 passthrough — the uncompressed-shuffle baseline."""
 
     name = "identity"
+    exact = True
 
     def nbytes(self, n_elements: int) -> int:
         return 4 * n_elements
@@ -77,6 +109,13 @@ class IdentityCodec(ShuffleCodec):
 
     def decode(self, enc):
         return enc.arrays[0].reshape(enc.shape)
+
+    def encode_device(self, x):
+        import jax.numpy as jnp
+        return (jnp.asarray(x, jnp.float32),)
+
+    def decode_device(self, *wire):
+        return wire[0]
 
 
 class Int16Codec(ShuffleCodec):
@@ -108,6 +147,16 @@ class Int16Codec(ShuffleCodec):
     def decode(self, enc):
         return (enc.arrays[0].astype(np.float32) *
                 (self.max_abs / 32767.0)).reshape(enc.shape)
+
+    def encode_device(self, x):
+        import jax.numpy as jnp
+        q = jnp.clip(jnp.round(x * (32767.0 / self.max_abs)),
+                     -32767, 32767).astype(jnp.int16)
+        return (q,)
+
+    def decode_device(self, *wire):
+        import jax.numpy as jnp
+        return wire[0].astype(jnp.float32) * (self.max_abs / 32767.0)
 
 
 class Int8BlockCodec(ShuffleCodec):
@@ -146,6 +195,23 @@ class Int8BlockCodec(ShuffleCodec):
         n = int(np.prod(enc.shape)) if enc.shape else 1
         flat = np.asarray(dequantize_block(q, scale, n, block=self.block))
         return flat.reshape(enc.shape)
+
+    # Device layout: per-ROW max-abs scales (one fp32 scale per item), so the
+    # shuffle can scatter rows independently of any cross-row block structure.
+    # Same 1/127 relative error bound as the host block codec; results differ
+    # from the host path within error_bound (documented, tested).
+
+    def encode_device(self, x):
+        import jax.numpy as jnp
+        scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-1), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(x / scale[..., None]), -127, 127
+                     ).astype(jnp.int8)
+        return (q, scale.astype(jnp.float32))
+
+    def decode_device(self, *wire):
+        import jax.numpy as jnp
+        q, scale = wire
+        return q.astype(jnp.float32) * scale[..., None]
 
 
 _REGISTRY: dict[str, ShuffleCodec] = {}

@@ -25,12 +25,14 @@ class StageStats:
 
     job: str = ""
     codec: str = "identity"
+    engine: str = "host"               # which engine ran: "host" | "device"
     n_items: int = 0
     n_partitions: int = 0
-    # map: key assignment + border replication (host side)
+    # map: key assignment + border replication
     map_wall_s: float = 0.0
     map_bytes: int = 0                 # input bytes read by the mappers
-    # shuffle: encode -> wire -> decode -> pad/stack
+    # shuffle: encode -> wire -> decode -> pad/stack. Walls are fenced with
+    # block_until_ready, so device stages report device time, not dispatch.
     shuffle_wall_s: float = 0.0
     shuffle_wire_bytes: int = 0        # bytes that crossed the shuffle
     shuffle_raw_bytes: int = 0         # float32-equivalent (compression baseline)
@@ -38,6 +40,7 @@ class StageStats:
     reduce_wall_s: float = 0.0
     reduce_flops: float = 0.0
     reduce_bytes: int = 0              # bytes streamed by the reduce kernels
+    reduce_padded_ratio: float = 1.0   # padded / real pair cells (capacity waste)
 
     @property
     def wall_s(self) -> float:

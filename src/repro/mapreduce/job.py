@@ -1,4 +1,4 @@
-"""Composable MapReduce jobs: one engine, pluggable stages.
+"""Composable MapReduce jobs: two engines, pluggable stages.
 
 The paper's wins (buffered writes, LZO shuffle compression, direct I/O) all
 swap a *stage* of Hadoop's fixed map -> shuffle -> reduce pipeline without
@@ -8,21 +8,37 @@ touching job logic. This module makes that the API:
 - ``ShuffleCodec``  (shuffle): wire format, by registry name (``codecs.py``),
 - ``Reducer``       (reduce): per-partition kernel + host-side finalize,
 
-composed into a ``MapReduceJob`` and executed by one engine that handles
-capacity padding, mesh sharding (``shard_map`` over the ``data`` axis), and
-multi-job batching (jobs sharing a partitioner/codec do ONE map+shuffle and a
-single fused reduce pass). Every run emits ``StageStats`` — per-stage bytes,
-FLOPs, and wall time — which ``StageStats.roofline()`` turns into the paper's
-Amdahl-number analysis for *any* job, not just the two hard-coded apps.
+composed into a ``MapReduceJob`` and executed by one of two engines:
+
+- ``engine="device"`` (default off-mesh): the hot path. Partition
+  assignment, border replication, argsort-based bucketing, and capacity
+  padding are vectorized array ops; the payload crosses the shuffle in the
+  codec's *wire dtype* (int16/int8) and is decoded on-device at the start
+  of the reduce, so shuffle traffic shrinks with the codec ratio.
+  Partitions are grouped into size tiers (``plan_tiers``) so one skewed
+  partition doesn't inflate every partition's capacity padding, and each
+  tier reduces through batched masked kernels (``pair_count_masked`` & co.:
+  Pallas partition-grid kernels on TPU, the z-banded blocked engine
+  elsewhere) instead of a sequential ``lax.map``.
+- ``engine="host"``: the original numpy shuffle + per-partition ``lax.map``
+  reduce. Kept as the oracle-parity path and the mesh (``shard_map``) path.
+
+Both engines handle multi-job batching (jobs sharing a partitioner/codec do
+ONE map+shuffle and a single fused reduce pass) and emit ``StageStats`` —
+per-stage bytes, FLOPs, and wall time (fenced with ``block_until_ready``) —
+which ``StageStats.roofline()`` turns into the paper's Amdahl-number
+analysis for *any* job, not just the two hard-coded apps.
 
     job = MapReduceJob("search", ZonePartitioner(radius), PairCountReducer(r),
                        codec="int16")
-    result = run_job(job, xyz, mesh=mesh)
+    result = run_job(job, xyz)                     # device engine
+    result = run_job(job, xyz, mesh=mesh)          # host engine + shard_map
     result.output, result.stats.to_dict()
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 
 import jax
@@ -71,8 +87,43 @@ class Partitioner:
         none (self-contained partitions, e.g. hash partitioning)."""
         return ()
 
+    # -- device (jax) hooks: the engine="device" map stage -----------------
 
-@dataclasses.dataclass
+    def assign_device(self, items):
+        """jnp version of ``assign`` ([n, d] device array -> [n] int32).
+        Default: round-trips through the host ``assign``."""
+        return jnp.asarray(self.assign(np.asarray(items)), jnp.int32)
+
+    def sort_key_device(self, items):
+        """Optional [n] secondary sort key: rows within a partition land in
+        this order, which tightens the per-tile ranges the z-banded blocked
+        reduce prunes on (``ZonePartitioner`` returns z). Order never
+        affects results — partition reductions are commutative sums — so
+        ``None`` (arrival order) is always correct."""
+        return None
+
+    def bucket_entries_device(self, items, keys, n_parts: int):
+        """-> (dest [m] int32, src [m] int32, valid [m] bool): every
+        (partition, item) bucket entry — owned points plus border copies —
+        with a static entry count ``m`` so the whole stream can be bucketed
+        by one argsort. Default: owned entries device-side, replicas (if
+        any) via the host ``replicas`` hook."""
+        n = keys.shape[0]
+        idx = jnp.arange(n, dtype=jnp.int32)
+        reps = list(self.replicas(np.asarray(items), np.asarray(keys),
+                                  n_parts))
+        if not reps:
+            return keys, idx, jnp.ones((n,), bool)
+        r_dest = np.concatenate(
+            [np.full(len(i), d, np.int32) for d, i in reps] or
+            [np.zeros(0, np.int32)])
+        r_src = np.concatenate([np.asarray(i, np.int32) for _, i in reps])
+        dest = jnp.concatenate([keys, jnp.asarray(r_dest)])
+        src = jnp.concatenate([idx, jnp.asarray(r_src)])
+        return dest, src, jnp.ones((dest.shape[0],), bool)
+
+
+@dataclasses.dataclass(frozen=True)
 class HashPartitioner(Partitioner):
     """Key mod n_parts on the first column — Hadoop's default partitioner."""
 
@@ -86,6 +137,10 @@ class HashPartitioner(Partitioner):
         return (np.asarray(key).astype(np.int64) % self.n_parts
                 ).astype(np.int32)
 
+    def assign_device(self, items):
+        key = items[:, 0] if items.ndim > 1 else items
+        return key.astype(jnp.int32) % self.n_parts
+
 
 class Reducer:
     """Reduce stage: a per-partition kernel (traced under ``lax.map`` /
@@ -98,6 +153,23 @@ class Reducer:
         """[C1, d], [C2, d] -> fixed-shape array, summed over partitions."""
         raise NotImplementedError
 
+    def reduce_partitions(self, owned, bucket, n_owned, n_bucket):
+        """Batched reduce over a whole size tier: [P, C1, d], [P, C2, d] +
+        [P] real counts -> the partition-summed result. Rows at index >=
+        count are capacity padding and MUST not contribute.
+
+        Default: re-mask padding to ``pad_value`` and ``lax.map`` the
+        per-partition kernel (correct for any reducer). Override with a
+        masked batched kernel (leading partition axis) for the hot path.
+        """
+        mo = jnp.arange(owned.shape[1], dtype=jnp.int32) < n_owned[:, None]
+        mb = jnp.arange(bucket.shape[1], dtype=jnp.int32) < n_bucket[:, None]
+        owned = jnp.where(mo[..., None], owned, self.pad_value)
+        bucket = jnp.where(mb[..., None], bucket, self.pad_value)
+        outs = jax.lax.map(lambda ab: self.per_partition(ab[0], ab[1]),
+                           (owned, bucket))
+        return jax.tree.map(lambda o: jnp.sum(o, axis=0), outs)
+
     def finalize(self, total, sd: "ShuffledData"):
         """Host-side post-combine (dedup corrections, differencing, ...)."""
         return np.asarray(total)
@@ -107,14 +179,91 @@ class Reducer:
         return 0.0
 
 
+class _PaddingAccounting:
+    """Shared padded-vs-real capacity accounting (both engines' ShuffledData
+    expose these; reducer ``flops`` estimates are written against them)."""
+
+    @property
+    def pair_cells(self) -> float:
+        """Total padded (owned x bucket) cells the reduce kernels cover."""
+        raise NotImplementedError
+
+    @property
+    def owned_cells(self) -> float:
+        """Total padded owned-capacity rows."""
+        raise NotImplementedError
+
+    @property
+    def real_pair_cells(self) -> float:
+        no = np.asarray(self.n_owned, np.float64)
+        nb = np.asarray(self.n_bucket, np.float64)
+        return float(np.sum(no * nb))
+
+    @property
+    def padded_ratio(self) -> float:
+        """pair_cells / real_pair_cells — how much compute the capacity
+        padding inflates (the fig3 ``bigger_blocks`` inversion in one
+        number)."""
+        real = self.real_pair_cells
+        return self.pair_cells / real if real else 1.0
+
+
 @dataclasses.dataclass
-class ShuffledData:
+class ShuffledData(_PaddingAccounting):
     """Post-shuffle state: fixed-capacity padded per-partition arrays."""
 
     owned: np.ndarray          # [P, C1, d] (pad_value-padded)
     bucket: np.ndarray         # [P, C2, d] owned + replicas (pad_value-padded)
     n_owned: np.ndarray        # [P] int32 real counts
     n_bucket: np.ndarray       # [P] int32 real counts
+
+    @property
+    def pair_cells(self) -> float:
+        P, C1, _ = self.owned.shape
+        return float(P) * C1 * self.bucket.shape[1]
+
+    @property
+    def owned_cells(self) -> float:
+        return float(self.owned.shape[0]) * self.owned.shape[1]
+
+
+@dataclasses.dataclass
+class TierData:
+    """One capacity size-class of the device shuffle: all partitions whose
+    bucket fits in C2 rows, padded to one [Pt, C*, ...] layout."""
+
+    part_ids: np.ndarray       # [Pt] global partition ids (host)
+    owned_wire: tuple          # codec wire arrays, leading dims [Pt, C1]
+    bucket_wire: tuple         # codec wire arrays, leading dims [Pt, C2]
+    n_owned: jax.Array         # [Pt] int32 real counts (device)
+    n_bucket: jax.Array        # [Pt] int32 real counts (device)
+    C1: int = 0
+    C2: int = 0
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(w.size) * w.dtype.itemsize
+                   for w in (*self.owned_wire, *self.bucket_wire))
+
+
+@dataclasses.dataclass
+class DeviceShuffledData(_PaddingAccounting):
+    """Post-shuffle state of the device engine: wire-dtype payloads grouped
+    into capacity tiers. ``n_owned``/``n_bucket`` are the global per-partition
+    real counts (host arrays), so reducer ``finalize`` hooks work unchanged
+    across engines."""
+
+    tiers: list
+    n_owned: np.ndarray        # [P] int32 (host)
+    n_bucket: np.ndarray       # [P] int32 (host)
+
+    @property
+    def pair_cells(self) -> float:
+        return float(sum(len(t.part_ids) * t.C1 * t.C2 for t in self.tiers))
+
+    @property
+    def owned_cells(self) -> float:
+        return float(sum(len(t.part_ids) * t.C1 for t in self.tiers))
 
 
 @dataclasses.dataclass
@@ -135,7 +284,7 @@ class JobResult:
 
 
 # ---------------------------------------------------------------------------
-# Engine
+# Host engine (oracle parity + mesh sharding)
 # ---------------------------------------------------------------------------
 
 def shuffle_stage(items, partitioner: Partitioner, codec="identity", *,
@@ -144,10 +293,13 @@ def shuffle_stage(items, partitioner: Partitioner, codec="identity", *,
                   stats: StageStats | None = None) -> ShuffledData:
     """Map (assign + replicate) then shuffle (codec wire trip, pad, stack).
 
-    The codec round-trips the payload exactly as the wire would see it;
-    ``stats.shuffle_wire_bytes`` counts codec bytes for every point that
-    lands in a bucket (owned + border copies), matching the paper's
-    "bytes that crossed the shuffle" accounting.
+    The codec round-trips the payload exactly as the wire would see it —
+    except for *exact* codecs (``identity``), whose no-op encode/decode is
+    skipped entirely (``ShuffleCodec.roundtrip``); ``shuffle_wire_bytes``
+    always comes from the static ``codec.nbytes`` formula, so no encoded
+    copy is ever materialized just for accounting. Wire bytes count every
+    point that lands in a bucket (owned + border copies), matching the
+    paper's "bytes that crossed the shuffle" accounting.
     """
     codec = get_codec(codec)
     items = np.asarray(items)
@@ -189,6 +341,7 @@ def shuffle_stage(items, partitioner: Partitioner, codec="identity", *,
     stats.n_items = len(items)
     stats.n_partitions = P_pad
     stats.codec = codec.name
+    stats.engine = "host"
     return sd
 
 
@@ -221,10 +374,250 @@ def reduce_stage(reducers, sd: ShuffledData, mesh=None):
         axis_names=frozenset({"data"}))(owned, bucket)
 
 
-def run_jobs(jobs, items, *, mesh=None) -> list[JobResult]:
+# ---------------------------------------------------------------------------
+# Device engine (the hot path): wire-dtype shuffle + tiered masked reduce
+# ---------------------------------------------------------------------------
+
+def plan_tiers(n_owned, n_bucket, tile: int, max_tiers: int = 3):
+    """Group partitions into <= ``max_tiers`` capacity size classes.
+
+    One global capacity (the host engine's choice) is sized by the most
+    skewed partition, so every partition pays the worst partition's padding
+    — the fig3 ``bigger_blocks`` inversion. Tiers bound that: partitions are
+    grouped by bucket capacity (rounded to the ``tile`` quantum) and each
+    tier is padded only to ITS max. The <=2 split points are chosen by
+    exhaustive search over distinct capacities, minimizing total padded
+    pair cells sum(P_t * C1_t * C2_t).
+
+    -> list of (part_ids ascending, C1, C2) per tier.
+    """
+    n_owned = np.asarray(n_owned, np.int64)
+    n_bucket = np.asarray(n_bucket, np.int64)
+    caps = np.array([_round_up(int(c), tile) for c in n_bucket], np.int64)
+    uniq = np.unique(caps)
+
+    def cost_and_tiers(thresholds):
+        cost, tiers, lo = 0.0, [], -1
+        for th in thresholds:
+            sel = np.flatnonzero((caps > lo) & (caps <= th))
+            lo = th
+            if not len(sel):
+                continue
+            C1 = _round_up(int(n_owned[sel].max()), tile)
+            cost += float(len(sel)) * C1 * th
+            tiers.append((sel, C1, int(th)))
+        return cost, tiers
+
+    import itertools
+    best = cost_and_tiers([int(uniq[-1])])
+    for k in range(2, min(max_tiers, len(uniq)) + 1):
+        for cut in itertools.combinations(range(len(uniq) - 1), k - 1):
+            cand = cost_and_tiers([int(uniq[i]) for i in cut]
+                                  + [int(uniq[-1])])
+            if cand[0] < best[0]:
+                best = cand
+    return best[1]
+
+
+@functools.partial(jax.jit, static_argnames=("specs", "has_skey"))
+def _scatter_tiers_jit(payloads, keys, dest_eff, src, skey, owned_starts,
+                       bucket_starts, part_tier, part_local, *, specs,
+                       has_skey):
+    """Argsort-based bucketing: sort bucket entries by (destination, sort
+    key), compute each entry's rank within its partition from the
+    exclusive-cumsum starts, and scatter the *wire-dtype* payload rows into
+    every tier's padded [Pt, C, ...] layout (entries outside the tier drop
+    out of range).
+
+    ``dest_eff`` is [m] with invalid entries set to P (they sort last and
+    hit ``part_tier[P] == -1``, so no tier claims them).
+    """
+    n, m = keys.shape[0], dest_eff.shape[0]
+    if has_skey:
+        ko = jnp.lexsort((skey, keys))
+        bo = jnp.lexsort((skey[src], dest_eff))
+    else:
+        ko = jnp.argsort(keys)
+        bo = jnp.argsort(dest_eff)
+    sk = keys[ko]
+    orank = jnp.arange(n, dtype=jnp.int32) - owned_starts[sk]
+    sd = dest_eff[bo]
+    brank = jnp.arange(m, dtype=jnp.int32) - bucket_starts[sd]
+    own_rows = tuple(p[ko] for p in payloads)
+    bkt_rows = tuple(p[src[bo]] for p in payloads)
+
+    def scatter(rows, pos, Pt, C):
+        return tuple(
+            jnp.zeros((Pt * C,) + r.shape[1:], r.dtype)
+            .at[pos].set(r, mode="drop")
+            .reshape((Pt, C) + r.shape[1:]) for r in rows)
+
+    out = []
+    for t, (Pt, C1, C2) in enumerate(specs):
+        o_pos = jnp.where(part_tier[sk] == t,
+                          part_local[sk] * C1 + orank, Pt * C1)
+        b_pos = jnp.where(part_tier[sd] == t,
+                          part_local[sd] * C2 + brank, Pt * C2)
+        out.append((scatter(own_rows, o_pos, Pt, C1),
+                    scatter(bkt_rows, b_pos, Pt, C2)))
+    return tuple(out)
+
+
+# On a CPU-only backend the XLA sort/scatter compiles cost more than the
+# whole shuffle; index *metadata* ([m] int32 permutations) is then computed
+# with vectorized numpy and only the payload moves through jax gathers.
+# Accelerator backends keep the pure-jnp path so the payload AND its
+# bucketing stay device-resident. Tests pin this to exercise both paths.
+SHUFFLE_INDEX_IMPL = "auto"            # "auto" | "jnp" | "host"
+
+
+def _use_jnp_indices() -> bool:
+    if SHUFFLE_INDEX_IMPL == "auto":
+        return jax.default_backend() != "cpu"
+    return SHUFFLE_INDEX_IMPL == "jnp"
+
+
+def _scatter_tiers_host(payloads, keys_h, dest_h, src_h, skey_h, o_starts,
+                        b_starts, part_tier, part_local, specs):
+    """numpy twin of ``_scatter_tiers_jit``: same argsort/rank math on the
+    index metadata, then one jax *gather* per tier (gather maps point padding
+    at row n, a zeros sentinel appended to the payload)."""
+    n = keys_h.shape[0]
+    if skey_h is not None:
+        ko = np.lexsort((skey_h, keys_h))
+        bo = np.lexsort((skey_h[src_h], dest_h))
+    else:
+        ko = np.argsort(keys_h, kind="stable")
+        bo = np.argsort(dest_h, kind="stable")
+    sk = keys_h[ko]
+    orank = np.arange(n, dtype=np.int32) - o_starts[sk]
+    sd = dest_h[bo]
+    brank = np.arange(len(dest_h), dtype=np.int32) - b_starts[sd]
+    ssrc = src_h[bo]
+    # numpy fancy indexing + one host->device put per tier array: on CPU this
+    # beats XLA's eager gather ~5x, and this path only runs on CPU backends
+    padded = tuple(np.concatenate(
+        [np.asarray(p), np.zeros((1,) + p.shape[1:], p.dtype)])
+        for p in payloads)
+
+    def gather(rows, sel_part, rank, srcs, t, Pt, C):
+        sel = part_tier[sel_part] == t
+        g = np.full(Pt * C, n, np.int32)
+        g[part_local[sel_part[sel]] * C + rank[sel]] = srcs[sel]
+        return tuple(jnp.asarray(p[g].reshape((Pt, C) + p.shape[1:]))
+                     for p in rows)
+
+    out = []
+    for t, (Pt, C1, C2) in enumerate(specs):
+        out.append((gather(padded, sk, orank, ko.astype(np.int32), t, Pt, C1),
+                    gather(padded, sd, brank, ssrc, t, Pt, C2)))
+    return tuple(out)
+
+
+def _run_jobs_device(jobs, items, stats: StageStats) -> list[JobResult]:
+    j0 = jobs[0]
+    codec = get_codec(j0.codec)
+    part = j0.partitioner
+    items = np.asarray(items)
+    if items.ndim == 1:
+        items = items[:, None]
+    d = items.shape[1]
+
+    # map: assignment + border replication as jax ops (index metadata —
+    # [m] int32 keys/destinations — is pulled once for counts & tiering)
+    t0 = time.perf_counter()
+    items_dev = jnp.asarray(items, jnp.float32)
+    P = int(part.n_partitions(items))
+    keys = part.assign_device(items_dev)
+    dest, src, valid = part.bucket_entries_device(items_dev, keys, P)
+    dest_eff = jnp.where(valid, dest, P).astype(jnp.int32)
+    src = jnp.asarray(src, jnp.int32)
+    keys_h = np.asarray(jax.block_until_ready(keys))
+    dest_h = np.asarray(dest_eff)
+    n_owned = np.bincount(keys_h, minlength=P).astype(np.int64)
+    n_bucket = np.bincount(dest_h, minlength=P + 1)[:P].astype(np.int64)
+    stats.map_wall_s = time.perf_counter() - t0
+    stats.map_bytes = items.nbytes
+
+    # shuffle: encode to wire dtype, tier, argsort-bucket, scatter
+    t0 = time.perf_counter()
+    plan = plan_tiers(n_owned, n_bucket, j0.tile)
+    part_tier = np.full(P + 1, -1, np.int32)
+    part_local = np.zeros(P + 1, np.int32)
+    specs = []
+    for t, (ids, C1, C2) in enumerate(plan):
+        part_tier[ids] = t
+        part_local[ids] = np.arange(len(ids), dtype=np.int32)
+        specs.append((len(ids), C1, C2))
+    o_starts = np.zeros(P + 1, np.int32)
+    np.cumsum(n_owned, out=o_starts[1:])
+    b_starts = np.zeros(P + 1, np.int32)
+    np.cumsum(n_bucket, out=b_starts[1:])
+    payloads = codec.encode_device(items_dev)
+    skey = part.sort_key_device(items_dev)
+    if _use_jnp_indices():
+        scattered = _scatter_tiers_jit(
+            payloads, keys, dest_eff, src,
+            jnp.zeros(0) if skey is None else skey, jnp.asarray(o_starts),
+            jnp.asarray(b_starts), jnp.asarray(part_tier),
+            jnp.asarray(part_local), specs=tuple(specs),
+            has_skey=skey is not None)
+    else:
+        src_h = np.asarray(src)
+        live = dest_h < P           # drop non-replicated border slots before
+        if not live.all():          # sorting: fewer copies = less sort work
+            dest_h, src_h = dest_h[live], src_h[live]
+        scattered = _scatter_tiers_host(
+            payloads, keys_h, dest_h, src_h,
+            None if skey is None else np.asarray(skey), o_starts, b_starts,
+            part_tier, part_local, tuple(specs))
+    scattered = jax.block_until_ready(scattered)
+    tiers = [TierData(ids, own, bkt, jnp.asarray(n_owned[ids], jnp.int32),
+                      jnp.asarray(n_bucket[ids], jnp.int32), C1=C1, C2=C2)
+             for (ids, C1, C2), (own, bkt) in zip(plan, scattered)]
+    sd = DeviceShuffledData(tiers, n_owned, n_bucket)
+    n_shuffled = int(n_bucket.sum())
+    stats.shuffle_wall_s = time.perf_counter() - t0
+    stats.shuffle_wire_bytes = n_shuffled * codec.device_bytes_per_item(d)
+    stats.shuffle_raw_bytes = 4 * n_shuffled * d
+    stats.n_items = len(items)
+    stats.n_partitions = P
+    stats.codec = codec.name
+    stats.engine = "device"
+
+    # reduce: decode on-device, then one batched masked kernel pass per tier
+    t0 = time.perf_counter()
+    reducers = tuple(j.reducer for j in jobs)
+    totals = None
+    for tier in tiers:
+        owned = codec.decode_device(*tier.owned_wire)
+        bucket = codec.decode_device(*tier.bucket_wire)
+        outs = tuple(r.reduce_partitions(owned, bucket, tier.n_owned,
+                                         tier.n_bucket) for r in reducers)
+        totals = outs if totals is None else tuple(
+            jax.tree.map(jnp.add, a, b) for a, b in zip(totals, outs))
+    totals = jax.block_until_ready(totals)
+    stats.reduce_wall_s = time.perf_counter() - t0
+    stats.reduce_bytes = sum(t.nbytes for t in tiers)
+    stats.reduce_flops = float(sum(j.reducer.flops(sd) for j in jobs))
+    stats.reduce_padded_ratio = sd.padded_ratio
+    return [JobResult(j.reducer.finalize(t, sd), stats)
+            for j, t in zip(jobs, totals)]
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def run_jobs(jobs, items, *, mesh=None, engine: str = "auto"
+             ) -> list[JobResult]:
     """Execute several jobs that share partitioner/codec/tile through ONE
     map+shuffle and one fused reduce pass (e.g. Neighbor Searching and
     Neighbor Statistics over the same catalog cost a single data pass).
+
+    ``engine``: ``"device"`` (wire-dtype shuffle + tiered masked batched
+    reduce), ``"host"`` (numpy shuffle + ``lax.map`` reduce; supports mesh
+    sharding), or ``"auto"`` (device unless a data-axis mesh is given).
     -> one JobResult per job, sharing a single StageStats."""
     if not jobs:
         return []
@@ -241,7 +634,18 @@ def run_jobs(jobs, items, *, mesh=None) -> list[JobResult]:
             raise ValueError(
                 f"batched jobs must share one shuffle: {j.name!r} differs "
                 f"from {j0.name!r} in {', '.join(diffs)}")
-    stats = StageStats(job="+".join(j.name for j in jobs))
+    if engine == "auto":
+        engine = "host" if _data_axis_size(mesh) > 1 else "device"
+    stats = StageStats(job="+".join(j.name for j in jobs), engine=engine)
+    if engine == "device":
+        if _data_axis_size(mesh) > 1:
+            raise ValueError(
+                "engine='device' runs single-process; use engine='host' "
+                "(or 'auto') for data-axis mesh sharding")
+        return _run_jobs_device(jobs, items, stats)
+    if engine != "host":
+        raise ValueError(f"unknown engine {engine!r}; "
+                         "expected 'auto', 'device', or 'host'")
     sd = shuffle_stage(items, j0.partitioner, c0, tile=j0.tile,
                        pad_partitions_to=_data_axis_size(mesh),
                        pad_value=j0.reducer.pad_value, stats=stats)
@@ -251,10 +655,12 @@ def run_jobs(jobs, items, *, mesh=None) -> list[JobResult]:
     stats.reduce_wall_s = time.perf_counter() - t0
     stats.reduce_bytes = sd.owned.nbytes + sd.bucket.nbytes
     stats.reduce_flops = float(sum(j.reducer.flops(sd) for j in jobs))
+    stats.reduce_padded_ratio = sd.padded_ratio
     return [JobResult(j.reducer.finalize(t, sd), stats)
             for j, t in zip(jobs, totals)]
 
 
-def run_job(job: MapReduceJob, items, *, mesh=None) -> JobResult:
+def run_job(job: MapReduceJob, items, *, mesh=None, engine: str = "auto"
+            ) -> JobResult:
     """Execute one job end-to-end. -> JobResult(output, stats)."""
-    return run_jobs([job], items, mesh=mesh)[0]
+    return run_jobs([job], items, mesh=mesh, engine=engine)[0]

@@ -18,25 +18,31 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.sky import ARCSEC
-from repro.kernels.zones_pairs.ops import pair_hist
+from repro.kernels.zones_pairs.ops import pair_hist, pair_hist_masked
 from repro.mapreduce.job import MapReduceJob, Reducer, ShuffledData, run_job
 from repro.mapreduce.zones import ZonePartitioner
 
 DEFAULT_EDGES_ARCSEC = tuple(float(e) for e in range(1, 61))
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class PairHistReducer(Reducer):
     """Cumulative per-edge pair counts per zone; finalize differentiates."""
 
     edges_rad: tuple
     use_pallas: bool | None = None
 
+    def _cos_edges(self):
+        return jnp.asarray(np.cos(np.asarray(self.edges_rad)), jnp.float32)
+
     def per_partition(self, owned_p, bucket_p):
-        cos_edges = jnp.asarray(np.cos(np.asarray(self.edges_rad)),
-                                jnp.float32)
-        return pair_hist(owned_p, bucket_p, cos_edges,
+        return pair_hist(owned_p, bucket_p, self._cos_edges(),
                          use_pallas=self.use_pallas)
+
+    def reduce_partitions(self, owned, bucket, n_owned, n_bucket):
+        return pair_hist_masked(owned, bucket, n_owned, n_bucket,
+                                self._cos_edges(),
+                                use_pallas=self.use_pallas)
 
     def finalize(self, total, sd: ShuffledData):
         cum = np.asarray(total).astype(np.int64)
@@ -45,8 +51,7 @@ class PairHistReducer(Reducer):
         return np.diff(np.concatenate([[0], cum]))
 
     def flops(self, sd: ShuffledData):
-        P, C1, _ = sd.owned.shape
-        return float(P) * C1 * sd.bucket.shape[1] * (6.0 + len(self.edges_rad))
+        return sd.pair_cells * (6.0 + len(self.edges_rad))
 
 
 def neighbor_statistics_job(edges_arcsec=None, *, codec="identity",

@@ -24,9 +24,10 @@ from repro.mapreduce.job import (HashPartitioner, JobResult, MapReduceJob,
                                  Reducer, ShuffledData, run_job)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class TokenHistogramReducer(Reducer):
-    """Per-partition bincount of owned tokens (padding rides as -1)."""
+    """Per-partition bincount of owned tokens (padding rides as -1 on the
+    host engine; masked by real counts on the device engine)."""
 
     vocab: int
     pad_value: float = -1.0
@@ -38,11 +39,20 @@ class TokenHistogramReducer(Reducer):
         return jnp.zeros((self.vocab,), jnp.int32).at[idx].add(
             valid.astype(jnp.int32))
 
+    def reduce_partitions(self, owned, bucket, n_owned, n_bucket):
+        tok = jnp.round(owned[..., 0]).astype(jnp.int32)      # [P, C1]
+        valid = ((jnp.arange(tok.shape[1], dtype=jnp.int32)[None, :]
+                  < n_owned[:, None])
+                 & (tok >= 0) & (tok < self.vocab))
+        idx = jnp.clip(tok, 0, self.vocab - 1)
+        return jnp.zeros((self.vocab,), jnp.int32).at[idx.ravel()].add(
+            valid.ravel().astype(jnp.int32))
+
     def finalize(self, total, sd: ShuffledData):
         return np.asarray(total, np.int64)
 
     def flops(self, sd: ShuffledData):
-        return float(sd.owned.shape[0] * sd.owned.shape[1]) * 4.0
+        return sd.owned_cells * 4.0
 
 
 def token_histogram_job(vocab: int, *, n_partitions: int = 8,
@@ -57,11 +67,11 @@ def token_histogram_job(vocab: int, *, n_partitions: int = 8,
 
 def token_histogram(tokens: np.ndarray, vocab: int, *, n_partitions: int = 8,
                     codec="identity", tile: int = 256,
-                    mesh=None) -> JobResult:
+                    mesh=None, engine: str = "auto") -> JobResult:
     """Count token occurrences across any token source block (e.g.
     ``SyntheticTokens.block`` / ``Pipeline.batch_at``). -> JobResult whose
     output is a [vocab] int64 count vector."""
     items = np.asarray(tokens).reshape(-1).astype(np.float32)
     job = token_histogram_job(vocab, n_partitions=n_partitions, codec=codec,
                               tile=tile)
-    return run_job(job, items, mesh=mesh)
+    return run_job(job, items, mesh=mesh, engine=engine)

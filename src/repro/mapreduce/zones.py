@@ -19,20 +19,29 @@ from __future__ import annotations
 import dataclasses
 import warnings
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.data import sky
-from repro.kernels.zones_pairs.ops import pair_count
+from repro.kernels.zones_pairs.ops import pair_count, pair_count_masked
 from repro.mapreduce.job import (MapReduceJob, Partitioner, Reducer,
                                  ShuffledData, run_job)
 
+# Border-replication margin: replicating a hair MORE than the radius is
+# always safe (extra copies can only re-find pairs that are already counted
+# from both endpoints' zones), while replicating a hair less silently drops
+# a pair. The epsilon absorbs f32-vs-f64 rounding in the edge tests, so the
+# host and device engines agree exactly even for points that sit within one
+# ulp of radius-from-edge.
+REPLICA_EPS = 1e-6
 
-@dataclasses.dataclass
+
+@dataclasses.dataclass(frozen=True)
 class ZonePartitioner(Partitioner):
     """Declination bands of height ``zone_height`` (default: the radius —
     the paper's "always favor larger blocks" choice, so border copies come
-    only from adjacent zones). Points within ``radius`` of a band edge are
-    replicated into the neighboring band's bucket."""
+    only from adjacent zones). Points within ``radius`` (+eps) of a band
+    edge are replicated into the neighboring band's bucket."""
 
     radius: float
     zone_height: float = 0.0
@@ -51,18 +60,52 @@ class ZonePartitioner(Partitioner):
                        0, Z - 1)
 
     def replicas(self, items, keys, n_parts):
-        h = self.height
+        h, margin = self.height, self.radius + REPLICA_EPS
         dec = sky.dec_of(items)
-        lo_edge = (dec - (keys * h - np.pi / 2)) <= self.radius
-        hi_edge = (((keys + 1) * h - np.pi / 2) - dec) <= self.radius
+        kf = keys.astype(np.float32)        # f32 edge math, same as device
+        lo_edge = (dec - (kf * h - np.pi / 2)) <= margin
+        hi_edge = (((kf + 1) * h - np.pi / 2) - dec) <= margin
         for k in range(n_parts):
             if k > 0:
                 yield k - 1, np.flatnonzero((keys == k) & lo_edge)
             if k + 1 < n_parts:
                 yield k + 1, np.flatnonzero((keys == k) & hi_edge)
 
+    # device map stage: zone assignment and border replication as jax ops —
+    # the whole (owned, lower-border, upper-border) entry stream has the
+    # static length 3n, bucketed by one argsort in the engine.
 
-@dataclasses.dataclass
+    def _dec_device(self, items):
+        return jnp.arcsin(jnp.clip(items[:, 2], -1.0, 1.0))
+
+    def assign_device(self, items):
+        Z = self.n_partitions(items)
+        dec = self._dec_device(items)
+        return jnp.clip(((dec + np.pi / 2) / self.height).astype(jnp.int32),
+                        0, Z - 1)
+
+    def sort_key_device(self, items):
+        # z-order within each zone: tight per-tile z ranges for the banded
+        # blocked reduce (order never changes results, only pruning power)
+        return items[:, 2]
+
+    def bucket_entries_device(self, items, keys, n_parts):
+        h, margin = self.height, self.radius + REPLICA_EPS
+        dec = self._dec_device(items)
+        kf = keys.astype(jnp.float32)
+        lo_edge = (dec - (kf * h - np.pi / 2)) <= margin
+        hi_edge = (((kf + 1) * h - np.pi / 2) - dec) <= margin
+        n = keys.shape[0]
+        idx = jnp.arange(n, dtype=jnp.int32)
+        dest = jnp.concatenate([keys, keys - 1, keys + 1])
+        src = jnp.concatenate([idx, idx, idx])
+        valid = jnp.concatenate([jnp.ones((n,), bool),
+                                 lo_edge & (keys > 0),
+                                 hi_edge & (keys + 1 < n_parts)])
+        return dest, src, valid
+
+
+@dataclasses.dataclass(frozen=True)
 class PairCountReducer(Reducer):
     """Blockwise within-radius pair count per zone; finalize removes self
     pairs and the double-count."""
@@ -74,13 +117,17 @@ class PairCountReducer(Reducer):
         return pair_count(owned_p, bucket_p, float(np.cos(self.radius)),
                           use_pallas=self.use_pallas)
 
+    def reduce_partitions(self, owned, bucket, n_owned, n_bucket):
+        return pair_count_masked(owned, bucket, n_owned, n_bucket,
+                                 float(np.cos(self.radius)),
+                                 use_pallas=self.use_pallas)
+
     def finalize(self, total, sd: ShuffledData):
         return (int(total) - int(sd.n_owned.sum())) // 2
 
     def flops(self, sd: ShuffledData):
         # per zone: C1*C2 dot products (2*3 FLOPs) + compares
-        P, C1, _ = sd.owned.shape
-        return float(P) * C1 * sd.bucket.shape[1] * 8.0
+        return sd.pair_cells * 8.0
 
 
 def neighbor_search_job(radius_rad: float, *, zone_height: float = 0.0,

@@ -10,7 +10,10 @@ from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.quantize.kernel import dequantize_pallas, quantize_pallas
 from repro.kernels.quantize.ref import dequantize_ref, quantize_ref
-from repro.kernels.zones_pairs.kernel import pair_count_pallas, pair_hist_pallas
+from repro.kernels.zones_pairs.kernel import (pair_count_masked_pallas,
+                                              pair_count_pallas,
+                                              pair_hist_masked_pallas,
+                                              pair_hist_pallas)
 from repro.kernels.zones_pairs.ref import pair_count_ref, pair_hist_ref
 
 
@@ -75,6 +78,96 @@ def test_pair_hist_sweep(nbins):
     got = pair_hist_pallas(a, b, edges, tm=256, tn=256, interpret=True)
     want = pair_hist_ref(a, b, edges)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# zones_pairs: masked-batched variants (leading partition axis + n_a/n_b
+# masking) — Pallas interpret-mode and the z-banded blocked reduce, both vs
+# a per-partition loop over the 2D reference on the *real* (unpadded) rows.
+# ---------------------------------------------------------------------------
+
+# ragged per-partition real counts, including zero-size partitions, a
+# full-capacity partition, and a single-partition "tier"
+MASKED_CASES = [
+    # (P, C1, C2, n_owned, n_bucket)
+    (4, 128, 256, (0, 128, 64, 1), (0, 256, 100, 3)),
+    (3, 64, 64, (64, 64, 64), (64, 64, 64)),          # single size class
+    (1, 256, 128, (200,), (90,)),                      # single partition
+    (5, 64, 128, (0, 0, 10, 64, 33), (0, 5, 0, 128, 77)),
+]
+
+
+def _masked_case(P, C1, C2, n_o, n_b, seed=0):
+    a = jnp.asarray(np.stack([sky.make_catalog(C1, seed + p)
+                              for p in range(P)]))
+    b = jnp.asarray(np.stack([sky.make_catalog(C2, 100 + seed + p)
+                              for p in range(P)]))
+    return a, b, jnp.asarray(n_o, jnp.int32), jnp.asarray(n_b, jnp.int32)
+
+
+def _loop_count(a, b, n_o, n_b, cmin):
+    return sum(int(pair_count_ref(a[p, :n_o[p]], b[p, :n_b[p]], cmin))
+               for p in range(a.shape[0]))
+
+
+def _loop_hist(a, b, n_o, n_b, edges):
+    out = np.zeros(edges.shape[0], np.int64)
+    for p in range(a.shape[0]):
+        out += np.asarray(pair_hist_ref(a[p, :n_o[p]], b[p, :n_b[p]], edges),
+                          np.int64)
+    return out
+
+
+@pytest.mark.parametrize("P,C1,C2,n_o,n_b", MASKED_CASES)
+@pytest.mark.parametrize("radius", [0.05, 0.3])
+def test_pair_count_masked_ragged(P, C1, C2, n_o, n_b, radius):
+    from repro.kernels.zones_pairs.blocked import pair_count_blocked
+    from repro.kernels.zones_pairs.ref import pair_count_masked_ref
+    a, b, no, nb = _masked_case(P, C1, C2, n_o, n_b)
+    cmin = float(np.cos(radius))
+    want = _loop_count(a, b, list(n_o), list(n_b), cmin)
+    got_pl = pair_count_masked_pallas(a, b, no, nb, cmin, tm=64, tn=64,
+                                      interpret=True)
+    got_ref = pair_count_masked_ref(a, b, no, nb, cmin)
+    got_blk = pair_count_blocked(a, b, no, nb, cmin)
+    assert int(got_pl) == want and int(got_ref) == want, (got_pl, want)
+    assert int(got_blk) == want, (got_blk, want)
+
+
+@pytest.mark.parametrize("P,C1,C2,n_o,n_b", MASKED_CASES)
+@pytest.mark.parametrize("nbins", [3, 17])
+def test_pair_hist_masked_ragged(P, C1, C2, n_o, n_b, nbins):
+    from repro.kernels.zones_pairs.blocked import pair_hist_blocked
+    from repro.kernels.zones_pairs.ref import pair_hist_masked_ref
+    a, b, no, nb = _masked_case(P, C1, C2, n_o, n_b, seed=7)
+    edges = jnp.asarray(np.cos(np.linspace(0.02, 0.4, nbins)), jnp.float32)
+    want = _loop_hist(a, b, list(n_o), list(n_b), edges)
+    got_pl = pair_hist_masked_pallas(a, b, no, nb, edges, tm=64, tn=64,
+                                     interpret=True)
+    got_ref = pair_hist_masked_ref(a, b, no, nb, edges)
+    got_blk = pair_hist_blocked(a, b, no, nb, edges)
+    np.testing.assert_array_equal(np.asarray(got_pl, np.int64), want)
+    np.testing.assert_array_equal(np.asarray(got_ref, np.int64), want)
+    np.testing.assert_array_equal(np.asarray(got_blk, np.int64), want)
+
+
+def test_blocked_prunes_but_counts_exactly():
+    """The z-banded blocked reduce must skip tile pairs (on a z-sorted
+    catalog spanning the sphere) yet return exactly the dense masked
+    count."""
+    from repro.kernels.zones_pairs import blocked
+    from repro.kernels.zones_pairs.ref import pair_count_masked_ref
+    xyz = sky.make_catalog(2048, 3)
+    xyz = xyz[np.argsort(xyz[:, 2])]        # z-sorted -> tight tile ranges
+    a = jnp.asarray(xyz[None])               # one big partition
+    no = jnp.asarray([2048], jnp.int32)
+    cmin = float(np.cos(0.05))
+    planned = blocked._plan_blocks(a, a, no, no, cmin)
+    n_tiles = (2048 // blocked.TM)
+    assert len(planned[0]) < n_tiles * n_tiles          # pruning happened
+    got = blocked.pair_count_blocked(a, a, no, no, cmin)
+    want = pair_count_masked_ref(a, a, no, no, cmin)
+    assert int(got) == int(want)
 
 
 # ---------------------------------------------------------------------------

@@ -141,6 +141,135 @@ def test_custom_job_composition():
 
 
 # ---------------------------------------------------------------------------
+# Engine parity: device (wire-dtype shuffle + tiered masked reduce) == host
+# ---------------------------------------------------------------------------
+
+def test_engine_parity_search_stats_wordcount():
+    """engine="device" must match engine="host" EXACTLY for all three jobs
+    with the exact (identity) and int16 codecs."""
+    xyz = sky.make_catalog(1500, 9)
+    radius = 0.07
+    edges = np.linspace(0.02, radius, 6)
+    toks = np.random.default_rng(5).integers(0, 900, 5000)
+    for codec in ("identity", "int16"):
+        sjob = neighbor_search_job(radius, codec=codec, tile=64)
+        hjob = neighbor_statistics_job(edges / sky.ARCSEC, codec=codec,
+                                       tile=64)
+        assert (run_job(sjob, xyz, engine="device").output
+                == run_job(sjob, xyz, engine="host").output)
+        np.testing.assert_array_equal(
+            run_job(hjob, xyz, engine="device").output,
+            run_job(hjob, xyz, engine="host").output)
+        np.testing.assert_array_equal(
+            token_histogram(toks, 900, codec=codec, tile=64,
+                            engine="device").output,
+            token_histogram(toks, 900, codec=codec, tile=64,
+                            engine="host").output)
+
+
+def test_engine_parity_batched_and_skewed():
+    """Batched jobs over one shuffle, with a skewed catalog (one crowded
+    zone) so the tier planner actually splits size classes."""
+    from repro.mapreduce import plan_tiers
+    rng = np.random.default_rng(11)
+    xyz = sky.make_catalog(900, 1)
+    xyz = np.concatenate([xyz, sky.make_catalog(600, 2) * 0 + xyz[:1]])
+    xyz[900:, 2] = np.clip(xyz[900:, 2] + rng.normal(0, 1e-3, 600), -1, 1)
+    n = np.linalg.norm(xyz, axis=1, keepdims=True)
+    xyz = (xyz / n).astype(np.float32)
+    radius = 0.08
+    part = ZonePartitioner(radius)
+    edges = np.linspace(0.02, radius, 4)
+    jobs = [neighbor_search_job(radius, partitioner=part, tile=64),
+            neighbor_statistics_job(edges / sky.ARCSEC, partitioner=part,
+                                    tile=64)]
+    rd = run_jobs(jobs, xyz, engine="device")
+    rh = run_jobs(jobs, xyz, engine="host")
+    assert rd[0].output == rh[0].output
+    np.testing.assert_array_equal(rd[1].output, rh[1].output)
+    assert rd[0].stats.engine == "device" and rh[0].stats.engine == "host"
+    # the skewed zone must land in its own capacity tier
+    keys = part.assign(xyz)
+    n_owned = np.bincount(keys, minlength=part.n_partitions(xyz))
+    tiers = plan_tiers(n_owned, n_owned * 2, 64)
+    assert len(tiers) >= 2
+
+
+def test_engine_parity_jnp_index_path():
+    """The pure-jnp argsort/scatter path (used on accelerator backends) must
+    match the numpy index path used on CPU."""
+    from repro.mapreduce import job as job_mod
+    xyz = sky.make_catalog(700, 3)
+    sjob = neighbor_search_job(0.09, codec="int16", tile=64)
+    want = run_job(sjob, xyz, engine="device").output
+    old = job_mod.SHUFFLE_INDEX_IMPL
+    job_mod.SHUFFLE_INDEX_IMPL = "jnp"
+    try:
+        got = run_job(sjob, xyz, engine="device").output
+    finally:
+        job_mod.SHUFFLE_INDEX_IMPL = old
+    assert got == want
+
+
+def test_device_engine_stats_and_wire_accounting():
+    xyz = sky.make_catalog(800, 6)
+    res = run_job(neighbor_search_job(0.06, codec="int16", tile=64), xyz,
+                  engine="device")
+    st = res.stats
+    assert st.engine == "device"
+    assert st.compression_ratio == pytest.approx(2.0)   # int16 wire dtype
+    assert st.reduce_padded_ratio >= 1.0
+    assert st.reduce_bytes > 0 and st.reduce_flops > 0
+    assert "reduce_padded_ratio" in st.to_dict()
+
+
+def test_device_engine_rejects_data_mesh():
+    from repro.core.compat import make_mesh
+    mesh = make_mesh((1,), ("model",))       # no data axis: device ok
+    xyz = sky.make_catalog(100, 0)
+    job = neighbor_search_job(0.1, tile=64)
+    assert run_job(job, xyz, mesh=mesh, engine="device").output == \
+        run_job(job, xyz, engine="host").output
+    with pytest.raises(ValueError):
+        run_jobs([job], xyz, engine="nonsense")
+
+
+def test_device_engine_empty_catalog():
+    """n=0 items: every stage must run clean and produce empty results."""
+    xyz = np.zeros((0, 3), np.float32)
+    job = neighbor_search_job(0.05, tile=64)
+    assert run_job(job, xyz, engine="device").output == 0
+    assert run_job(job, xyz, engine="host").output == 0
+    hjob = neighbor_statistics_job([10.0, 20.0], tile=64)
+    np.testing.assert_array_equal(
+        run_job(hjob, xyz, engine="device").output, [0, 0])
+
+
+def test_codec_exact_flags():
+    assert get_codec("identity").exact
+    assert not get_codec("int16").exact and not get_codec("int8").exact
+
+
+def test_codec_device_transforms_roundtrip():
+    """decode_device(encode_device(x)) matches the host roundtrip exactly
+    for identity/int16 (bit-exact wire contract), within error_bound for
+    the per-row int8 device layout."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(2)
+    x = rng.uniform(-1, 1, (257, 3)).astype(np.float32)
+    for name in ("identity", "int16"):
+        codec = get_codec(name)
+        dev = np.asarray(codec.decode_device(*codec.encode_device(
+            jnp.asarray(x))))
+        np.testing.assert_array_equal(dev, codec.roundtrip(x))
+    codec = get_codec("int8")
+    dev = np.asarray(codec.decode_device(*codec.encode_device(
+        jnp.asarray(x))))
+    assert np.max(np.abs(dev - x)) <= codec.error_bound(x) + 1e-7
+    assert codec.device_bytes_per_item(3) == 3 + 4      # int8 codes + scale
+
+
+# ---------------------------------------------------------------------------
 # StageStats -> RooflineTerms
 # ---------------------------------------------------------------------------
 
