@@ -32,6 +32,19 @@ def _t(fn, *args, reps=5, warmup=2):
     return (time.perf_counter() - t0) / reps * 1e6, out
 
 
+def _subprocess_bench_json(script: str, error_name: str):
+    """Run a multi-device bench snippet in a subprocess (forced host
+    devices need their own process) and parse its last stdout line as
+    JSON. -> (data, None) on success, (None, error_row) on failure."""
+    env = dict(os.environ)
+    env.pop("JAX_PLATFORMS", None)
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=900, env=env)
+    if r.returncode != 0:
+        return None, (error_name, 0.0, r.stderr.strip()[-120:])
+    return json.loads(r.stdout.strip().splitlines()[-1]), None
+
+
 def fig1_direct_io():
     """Donation (direct I/O analogue): in-place update vs copy on a 64MB state."""
     rows = []
@@ -84,18 +97,12 @@ for name, body in {
     out[name] = {"intra": a.coll_wire_intra, "cross": a.coll_wire_cross}
 print(json.dumps(out))
 """ % (os.path.join(ROOT, "src"),)
-    env = dict(os.environ)
-    env.pop("JAX_PLATFORMS", None)
-    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
-                       text=True, timeout=900, env=env)
-    rows = []
-    if r.returncode != 0:
-        return [("table2_error", 0.0, r.stderr.strip()[-120:])]
-    data = json.loads(r.stdout.strip().splitlines()[-1])
-    for name, d in data.items():
-        rows.append((f"table2_sync_{name}", 0.0,
-                     f"wire_intra={d['intra']:.3g}_cross={d['cross']:.3g}"))
-    return rows
+    data, err = _subprocess_bench_json(script, "table2_error")
+    if err:
+        return [err]
+    return [(f"table2_sync_{name}", 0.0,
+             f"wire_intra={d['intra']:.3g}_cross={d['cross']:.3g}")
+            for name, d in data.items()]
 
 
 def fig2_pipeline():
@@ -171,7 +178,47 @@ def fig3_improvements():
                      f"_ratio={st.compression_ratio:.1f}"
                      f"_domstage={st.dominant_stage}"
                      f"_padratio={st.reduce_padded_ratio:.2f}{lossy}"))
+    rows += _fig3_sharded()
     return rows
+
+
+def _fig3_sharded():
+    """Sharded-mesh rows for fig3: the SAME search job on an 8-shard data
+    mesh through both engines (subprocess, 8 forced host devices), so the
+    device-vs-host crossover under sharding — the paper's "spread the
+    reduce across more cores" claim — is measurable next to the
+    single-device rows. Same warmup + best-of-5 convention."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, %r)
+import json
+import numpy as np
+from repro.core.compat import make_mesh
+from repro.data import sky
+from repro.mapreduce import neighbor_search_job, run_job
+
+mesh = make_mesh((8,), ("data",))
+xyz = sky.make_catalog(20000, 0)
+job = neighbor_search_job(0.02, tile=64, codec="int16")
+out = {}
+for engine in ("device", "host"):
+    run_job(job, xyz, mesh=mesh, engine=engine)            # warmup
+    res = min((run_job(job, xyz, mesh=mesh, engine=engine)
+               for _ in range(5)), key=lambda r: r.stats.wall_s)
+    st = res.stats
+    out[engine] = {"us": st.wall_s * 1e6, "pairs": int(res.output),
+                   "n_shards": st.n_shards,
+                   "maxshardpad": max(st.shard_padded_ratio)}
+print(json.dumps(out))
+""" % (os.path.join(ROOT, "src"),)
+    data, err = _subprocess_bench_json(script, "fig3_sharded_error")
+    if err:
+        return [err]
+    return [(f"fig3_sharded_{engine}_8shard", d["us"],
+             f"pairs={d['pairs']}_nshards={d['n_shards']}"
+             f"_maxshardpad={d['maxshardpad']:.2f}")
+            for engine, d in data.items()]
 
 
 def table3_apps():
@@ -218,7 +265,43 @@ def table3_apps():
     rows.append(("table3_wordcount_64x1024", res.stats.wall_s * 1e6,
                  f"tokens={toks.size}_top={int(res.output.max())}"
                  f"_domstage={res.stats.dominant_stage}"))
+    rows += _table3_sharded()
     return rows
+
+
+def _table3_sharded():
+    """The batched search+stats pass on an 8-shard data mesh through the
+    sharded device engine (subprocess, 8 forced host devices) — the
+    multi-node analogue of the paper's per-app runtime rows."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, %r)
+import json
+import numpy as np
+from repro.core.compat import make_mesh
+from repro.data import sky
+from repro.mapreduce import (ZonePartitioner, neighbor_search_job,
+                             neighbor_statistics_job, run_jobs)
+
+mesh = make_mesh((8,), ("data",))
+xyz = sky.make_catalog(20000, 1)
+edges = np.linspace(0.005, 0.04, 8)
+part = ZonePartitioner(float(edges[-1]))
+jobs = [neighbor_search_job(float(edges[-1]), partitioner=part, tile=256),
+        neighbor_statistics_job(edges / sky.ARCSEC, partitioner=part,
+                                tile=256)]
+run_jobs(jobs, xyz, mesh=mesh, engine="device")            # warmup
+rs = run_jobs(jobs, xyz, mesh=mesh, engine="device")
+print(json.dumps({"us": rs[0].stats.wall_s * 1e6,
+                  "pairs": int(rs[0].output),
+                  "n_shards": rs[0].stats.n_shards}))
+""" % (os.path.join(ROOT, "src"),)
+    d, err = _subprocess_bench_json(script, "table3_sharded_error")
+    if err:
+        return [err]
+    return [("table3_search+stats_sharded_8shard", d["us"],
+             f"pairs={d['pairs']}_nshards={d['n_shards']}_engine=device")]
 
 
 def table4_amdahl():

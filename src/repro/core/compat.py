@@ -25,7 +25,15 @@ def shard_map(f, *, mesh, in_specs, out_specs, axis_names):
     """jax.shard_map, falling back to jax.experimental.shard_map (which is
     fully manual: the fallback treats every mesh axis as manual, so only use
     this for regions where ``axis_names`` covers all axes the body touches
-    collectively and the specs fully describe the partitioning)."""
+    collectively and the specs fully describe the partitioning).
+
+    Closed-over arrays: bodies may close over jax Arrays (decoded tier
+    payloads, codec constants). On jax 0.4.x the *eager* experimental
+    shard_map refuses operands/closures committed to a single device
+    ("incompatible devices for jitted computation") while ``jit(shard_map)``
+    happily reshards them onto the mesh — so the fallback is returned
+    jit-wrapped. Nested jit is a no-op for callers that already jit.
+    """
     try:
         return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, axis_names=axis_names,
@@ -35,5 +43,5 @@ def shard_map(f, *, mesh, in_specs, out_specs, axis_names):
         # shard_map's `auto=` (partial-manual) hits XLA partitioner RET_CHECK
         # failures on gathers, so it is deliberately NOT used here.
         from jax.experimental.shard_map import shard_map as _sm
-        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                   check_rep=False)
+        return jax.jit(_sm(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_rep=False))

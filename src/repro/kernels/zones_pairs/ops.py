@@ -46,12 +46,26 @@ def pair_hist(a, b, cos_edges, *, exclude_self: bool = False,
 # results, tile pairs outside the z band pruned, fixed-shape chunks so the
 # XLA compile is shared across codecs, radii, and job shapes. These run
 # eagerly (the blocked path plans its blocks on the host), NOT under jit.
+#
+# Traceability: the Pallas variants are pure traced jax and can run inside
+# a ``shard_map`` region (the mesh-sharded device reduce; interpret mode
+# included), and both tolerate all-padding shards (every n_a/n_b zero — the
+# ``pl.when`` guard / validity mask zero out every tile). The blocked path
+# CANNOT be traced (host-side block planning); ``masked_uses_pallas``
+# resolves which one a given ``use_pallas`` setting lands on, so the engine
+# knows whether the sharded reduce may trace the kernel or must slice
+# shards eagerly.
+
+
+def masked_uses_pallas(use_pallas: bool | None = None) -> bool:
+    """Resolve a ``use_pallas`` setting: True -> traceable Pallas masked
+    kernels, False -> the eager-only z-banded blocked engine."""
+    return _on_tpu() if use_pallas is None else use_pallas
+
 
 def pair_count_masked(a, b, n_a, n_b, cos_min, *,
                       use_pallas: bool | None = None):
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    if use_pallas:
+    if masked_uses_pallas(use_pallas):
         return pair_count_masked_pallas(a, b, n_a, n_b, cos_min,
                                         interpret=not _on_tpu())
     from repro.kernels.zones_pairs.blocked import pair_count_blocked
@@ -60,9 +74,7 @@ def pair_count_masked(a, b, n_a, n_b, cos_min, *,
 
 def pair_hist_masked(a, b, n_a, n_b, cos_edges, *,
                      use_pallas: bool | None = None):
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    if use_pallas:
+    if masked_uses_pallas(use_pallas):
         return pair_hist_masked_pallas(a, b, n_a, n_b, cos_edges,
                                        interpret=not _on_tpu())
     from repro.kernels.zones_pairs.blocked import pair_hist_blocked

@@ -1,10 +1,14 @@
 """Composable MapReduce on a jax mesh.
 
 Stage plugins (``Partitioner`` / ``ShuffleCodec`` / ``Reducer``) compose into
-a ``MapReduceJob`` run by one engine (``job.py``); every run emits
-``StageStats`` for per-stage Amdahl accounting. The paper's two apps
-(``zones.py``, ``stats.py``) and the wordcount job (``wordcount.py``) are
-thin definitions on this API; ``api.py`` keeps the legacy surface.
+a ``MapReduceJob`` run by one of two engines (``job.py``): ``device`` (the
+default — wire-dtype shuffle, capacity tiers, masked batched reduce; under a
+``data``-axis mesh the tiers shard across the axis and tier partials combine
+with a psum) and ``host`` (the numpy + ``lax.map`` oracle, bit-identical for
+exact codecs on or off mesh). Every run emits ``StageStats`` for per-stage
+Amdahl accounting. The paper's two apps (``zones.py``, ``stats.py``) and the
+wordcount job (``wordcount.py``) are thin definitions on this API;
+``api.py`` keeps the legacy surface.
 """
 # Job API (the composable surface)
 from repro.mapreduce.codecs import (EncodedShuffle, IdentityCodec,

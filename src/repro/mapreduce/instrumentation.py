@@ -28,6 +28,7 @@ class StageStats:
     engine: str = "host"               # which engine ran: "host" | "device"
     n_items: int = 0
     n_partitions: int = 0
+    n_shards: int = 1                  # mesh data-axis size the reduce ran over
     # map: key assignment + border replication
     map_wall_s: float = 0.0
     map_bytes: int = 0                 # input bytes read by the mappers
@@ -36,11 +37,16 @@ class StageStats:
     shuffle_wall_s: float = 0.0
     shuffle_wire_bytes: int = 0        # bytes that crossed the shuffle
     shuffle_raw_bytes: int = 0         # float32-equivalent (compression baseline)
+    shuffle_index_impl: str = ""       # resolved index path: "jnp"|"host"|"numpy"
     # reduce: per-partition kernels + combine
     reduce_wall_s: float = 0.0
     reduce_flops: float = 0.0
     reduce_bytes: int = 0              # bytes streamed by the reduce kernels
     reduce_padded_ratio: float = 1.0   # padded / real pair cells (capacity waste)
+    # per-shard padded/real pair-cell ratios, length n_shards (a shard of
+    # pure phantom padding shows its full padded cell count — load imbalance
+    # and phantom waste in one vector; empty () off the MapReduce engines)
+    shard_padded_ratio: tuple = ()
 
     @property
     def wall_s(self) -> float:

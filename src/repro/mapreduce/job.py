@@ -19,9 +19,14 @@ composed into a ``MapReduceJob`` and executed by one of two engines:
   partition doesn't inflate every partition's capacity padding, and each
   tier reduces through batched masked kernels (``pair_count_masked`` & co.:
   Pallas partition-grid kernels on TPU, the z-banded blocked engine
-  elsewhere) instead of a sequential ``lax.map``.
+  elsewhere) instead of a sequential ``lax.map``. Under a ``data``-axis
+  mesh the tier arrays are padded so every tier's partition count divides
+  the axis size, each shard reduces its own rows, and tier partials
+  combine with a ``psum`` (``_reduce_tier_sharded``) — the fast path and
+  the scalable path are no longer mutually exclusive.
 - ``engine="host"``: the original numpy shuffle + per-partition ``lax.map``
-  reduce. Kept as the oracle-parity path and the mesh (``shard_map``) path.
+  reduce. Kept as the oracle-parity path (also under a mesh: the device
+  engine's sharded results are bit-identical for exact codecs).
 
 Both engines handle multi-job batching (jobs sharing a partitioner/codec do
 ONE map+shuffle and a single fused reduce pass) and emit ``StageStats`` —
@@ -32,7 +37,7 @@ analysis for *any* job, not just the two hard-coded apps.
     job = MapReduceJob("search", ZonePartitioner(radius), PairCountReducer(r),
                        codec="int16")
     result = run_job(job, xyz)                     # device engine
-    result = run_job(job, xyz, mesh=mesh)          # host engine + shard_map
+    result = run_job(job, xyz, mesh=mesh)          # device engine, sharded
     result.output, result.stats.to_dict()
 """
 from __future__ import annotations
@@ -170,6 +175,14 @@ class Reducer:
                            (owned, bucket))
         return jax.tree.map(lambda o: jnp.sum(o, axis=0), outs)
 
+    def reduce_traceable(self) -> bool:
+        """Whether ``reduce_partitions`` is pure traced jax — callable inside
+        a ``shard_map`` region. The default masked ``lax.map`` is; reducers
+        that delegate to the z-banded blocked engine (host-side block
+        planning) are not, and the sharded reduce falls back to eager
+        per-shard slicing with a psum combine of the partials."""
+        return True
+
     def finalize(self, total, sd: "ShuffledData"):
         """Host-side post-combine (dedup corrections, differencing, ...)."""
         return np.asarray(total)
@@ -230,15 +243,19 @@ class ShuffledData(_PaddingAccounting):
 @dataclasses.dataclass
 class TierData:
     """One capacity size-class of the device shuffle: all partitions whose
-    bucket fits in C2 rows, padded to one [Pt, C*, ...] layout."""
+    bucket fits in C2 rows, padded to one [Pt, C*, ...] layout. Under a
+    ``data``-axis mesh, ``Pt`` is rounded up to a multiple of the axis size
+    with *phantom* partitions (all-padding rows, zero real counts) so the
+    tier splits evenly across shards; the masked kernels ignore them."""
 
-    part_ids: np.ndarray       # [Pt] global partition ids (host)
+    part_ids: np.ndarray       # [P_real] global partition ids (host)
     owned_wire: tuple          # codec wire arrays, leading dims [Pt, C1]
     bucket_wire: tuple         # codec wire arrays, leading dims [Pt, C2]
-    n_owned: jax.Array         # [Pt] int32 real counts (device)
-    n_bucket: jax.Array        # [Pt] int32 real counts (device)
+    n_owned: jax.Array         # [Pt] int32 real counts (device; 0 = phantom)
+    n_bucket: jax.Array        # [Pt] int32 real counts (device; 0 = phantom)
     C1: int = 0
     C2: int = 0
+    Pt: int = 0                # padded partition rows (multiple of n_shards)
 
     @property
     def nbytes(self) -> int:
@@ -259,11 +276,11 @@ class DeviceShuffledData(_PaddingAccounting):
 
     @property
     def pair_cells(self) -> float:
-        return float(sum(len(t.part_ids) * t.C1 * t.C2 for t in self.tiers))
+        return float(sum(t.Pt * t.C1 * t.C2 for t in self.tiers))
 
     @property
     def owned_cells(self) -> float:
-        return float(sum(len(t.part_ids) * t.C1 for t in self.tiers))
+        return float(sum(t.Pt * t.C1 for t in self.tiers))
 
 
 @dataclasses.dataclass
@@ -342,6 +359,7 @@ def shuffle_stage(items, partitioner: Partitioner, codec="identity", *,
     stats.n_partitions = P_pad
     stats.codec = codec.name
     stats.engine = "host"
+    stats.shuffle_index_impl = "numpy"     # the host shuffle is all numpy
     return sd
 
 
@@ -378,7 +396,8 @@ def reduce_stage(reducers, sd: ShuffledData, mesh=None):
 # Device engine (the hot path): wire-dtype shuffle + tiered masked reduce
 # ---------------------------------------------------------------------------
 
-def plan_tiers(n_owned, n_bucket, tile: int, max_tiers: int = 3):
+def plan_tiers(n_owned, n_bucket, tile: int, max_tiers: int = 3,
+               pad_partitions_to: int = 1):
     """Group partitions into <= ``max_tiers`` capacity size classes.
 
     One global capacity (the host engine's choice) is sized by the most
@@ -389,7 +408,14 @@ def plan_tiers(n_owned, n_bucket, tile: int, max_tiers: int = 3):
     exhaustive search over distinct capacities, minimizing total padded
     pair cells sum(P_t * C1_t * C2_t).
 
-    -> list of (part_ids ascending, C1, C2) per tier.
+    ``pad_partitions_to`` (the mesh's ``data`` axis size): each tier's
+    partition count is rounded up to a multiple of it with phantom
+    all-padding partitions so the tier splits evenly across shards; the
+    cost search charges those phantom rows, so under a wide mesh the
+    planner leans toward fewer, fuller tiers.
+
+    -> list of (part_ids ascending, C1, C2) per tier (part_ids are REAL
+    partitions only; the engine appends the phantoms).
     """
     n_owned = np.asarray(n_owned, np.int64)
     n_bucket = np.asarray(n_bucket, np.int64)
@@ -404,7 +430,7 @@ def plan_tiers(n_owned, n_bucket, tile: int, max_tiers: int = 3):
             if not len(sel):
                 continue
             C1 = _round_up(int(n_owned[sel].max()), tile)
-            cost += float(len(sel)) * C1 * th
+            cost += float(_round_up(len(sel), pad_partitions_to)) * C1 * th
             tiers.append((sel, C1, int(th)))
         return cost, tiers
 
@@ -468,6 +494,10 @@ def _scatter_tiers_jit(payloads, keys, dest_eff, src, skey, owned_starts,
 # with vectorized numpy and only the payload moves through jax gathers.
 # Accelerator backends keep the pure-jnp path so the payload AND its
 # bucketing stay device-resident. Tests pin this to exercise both paths.
+# The RESOLVED choice is recorded in ``StageStats.shuffle_index_impl``
+# ("jnp" | "host") so an "auto" run under a mesh is never ambiguous about
+# which path produced its shuffle metadata; both paths must produce
+# identical tier layouts and results (asserted in tests and md_check).
 SHUFFLE_INDEX_IMPL = "auto"            # "auto" | "jnp" | "host"
 
 
@@ -514,10 +544,98 @@ def _scatter_tiers_host(payloads, keys_h, dest_h, src_h, skey_h, o_starts,
     return tuple(out)
 
 
-def _run_jobs_device(jobs, items, stats: StageStats) -> list[JobResult]:
+def _make_sharded_body(reducers, codec, mesh):
+    """shard_map'd decode + masked reduce + psum for traceable reducers."""
+    from jax.sharding import PartitionSpec as P
+
+    def body(ow, bw, no, nb):
+        owned = codec.decode_device(*ow)
+        bucket = codec.decode_device(*bw)
+        outs = tuple(r.reduce_partitions(owned, bucket, no, nb)
+                     for r in reducers)
+        return jax.tree.map(lambda x: jax.lax.psum(x, "data"), outs)
+
+    shard = P("data")                   # prefix spec: shard axis 0, rest repl
+    return _shard_map_compat(
+        body, mesh=mesh, in_specs=(shard, shard, shard, shard),
+        out_specs=P(), axis_names=frozenset({"data"}))
+
+
+def _make_psum_combine(mesh):
+    """shard_map'd psum of stacked [D, ...] per-shard partial pytrees."""
+    from jax.sharding import PartitionSpec as P
+
+    def combine(t):
+        return jax.tree.map(
+            lambda x: jax.lax.psum(jnp.sum(x, axis=0), "data"), t)
+
+    return _shard_map_compat(combine, mesh=mesh, in_specs=(P("data"),),
+                             out_specs=P(), axis_names=frozenset({"data"}))
+
+
+# The shard_map'd callables must be REUSED across calls for jit's internal
+# shape cache to hit (it keys on function identity; a fresh closure per
+# run_job would retrace + recompile every tier of every run). Keys are
+# hashable for the stock stages (frozen-dataclass reducers, registry codec
+# singletons, meshes); unhashable custom stages fall back to an uncached
+# build and pay the retrace.
+_make_sharded_body_cached = functools.lru_cache(maxsize=None)(
+    _make_sharded_body)
+_make_psum_combine_cached = functools.lru_cache(maxsize=None)(
+    _make_psum_combine)
+
+
+def _reduce_tier_sharded(reducers, codec, tier: TierData, mesh):
+    """Reduce one tier across the mesh's ``data`` axis and psum-combine.
+
+    Tier rows are contiguous per shard (shard ``s`` owns rows
+    ``[s*Pt/D, (s+1)*Pt/D)``; phantom partitions mask to nothing). Two
+    sub-paths mirror the ``ops.py`` backend split:
+
+    - every reducer traceable (Pallas masked kernels on TPU, pure-jnp
+      reducers anywhere): decode + masked reduce + ``lax.psum`` run INSIDE
+      one ``shard_map`` region, so the wire payload is resharded once and
+      each shard's kernels run on its own device.
+    - otherwise (the z-banded blocked engine plans its blocks on the host,
+      which cannot happen under tracing): each shard's rows are sliced and
+      reduced eagerly, then the stacked per-shard partials cross ONE
+      ``shard_map`` psum. Bit-identical either way — the accumulators are
+      integers and all engines share the ``_dots2d`` score formulation.
+
+    -> tuple of per-reducer totals (replicated).
+    """
+    D = _data_axis_size(mesh)
+    if all(r.reduce_traceable() for r in reducers):
+        try:
+            fn = _make_sharded_body_cached(reducers, codec, mesh)
+        except TypeError:               # unhashable custom reducer/codec
+            fn = _make_sharded_body(reducers, codec, mesh)
+        return fn(tier.owned_wire, tier.bucket_wire, tier.n_owned,
+                  tier.n_bucket)
+
+    q = tier.Pt // D
+    partials = []
+    for s in range(D):
+        sl = slice(s * q, (s + 1) * q)
+        owned = codec.decode_device(*(w[sl] for w in tier.owned_wire))
+        bucket = codec.decode_device(*(w[sl] for w in tier.bucket_wire))
+        partials.append(tuple(
+            r.reduce_partitions(owned, bucket, tier.n_owned[sl],
+                                tier.n_bucket[sl]) for r in reducers))
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *partials)
+    try:
+        combine = _make_psum_combine_cached(mesh)
+    except TypeError:
+        combine = _make_psum_combine(mesh)
+    return combine(stacked)
+
+
+def _run_jobs_device(jobs, items, stats: StageStats,
+                     mesh=None) -> list[JobResult]:
     j0 = jobs[0]
     codec = get_codec(j0.codec)
     part = j0.partitioner
+    D = _data_axis_size(mesh)
     items = np.asarray(items)
     if items.ndim == 1:
         items = items[:, None]
@@ -539,22 +657,26 @@ def _run_jobs_device(jobs, items, stats: StageStats) -> list[JobResult]:
     stats.map_wall_s = time.perf_counter() - t0
     stats.map_bytes = items.nbytes
 
-    # shuffle: encode to wire dtype, tier, argsort-bucket, scatter
+    # shuffle: encode to wire dtype, tier, argsort-bucket, scatter. Tier
+    # partition counts are padded to a multiple of the mesh's data axis
+    # size with phantom (zero-count) partitions, so every tier splits
+    # evenly across shards.
     t0 = time.perf_counter()
-    plan = plan_tiers(n_owned, n_bucket, j0.tile)
+    plan = plan_tiers(n_owned, n_bucket, j0.tile, pad_partitions_to=D)
     part_tier = np.full(P + 1, -1, np.int32)
     part_local = np.zeros(P + 1, np.int32)
     specs = []
     for t, (ids, C1, C2) in enumerate(plan):
         part_tier[ids] = t
         part_local[ids] = np.arange(len(ids), dtype=np.int32)
-        specs.append((len(ids), C1, C2))
+        specs.append((_round_up(len(ids), D), C1, C2))
     o_starts = np.zeros(P + 1, np.int32)
     np.cumsum(n_owned, out=o_starts[1:])
     b_starts = np.zeros(P + 1, np.int32)
     np.cumsum(n_bucket, out=b_starts[1:])
     payloads = codec.encode_device(items_dev)
     skey = part.sort_key_device(items_dev)
+    stats.shuffle_index_impl = "jnp" if _use_jnp_indices() else "host"
     if _use_jnp_indices():
         scattered = _scatter_tiers_jit(
             payloads, keys, dest_eff, src,
@@ -572,9 +694,19 @@ def _run_jobs_device(jobs, items, stats: StageStats) -> list[JobResult]:
             None if skey is None else np.asarray(skey), o_starts, b_starts,
             part_tier, part_local, tuple(specs))
     scattered = jax.block_until_ready(scattered)
-    tiers = [TierData(ids, own, bkt, jnp.asarray(n_owned[ids], jnp.int32),
-                      jnp.asarray(n_bucket[ids], jnp.int32), C1=C1, C2=C2)
-             for (ids, C1, C2), (own, bkt) in zip(plan, scattered)]
+    tiers = []
+    shard_pad = np.zeros(D, np.float64)
+    shard_real = np.zeros(D, np.float64)
+    for ((ids, C1, C2), (Pt, _, _), (own, bkt)) in zip(plan, specs, scattered):
+        no_t = np.zeros(Pt, np.int64)
+        nb_t = np.zeros(Pt, np.int64)
+        no_t[:len(ids)] = n_owned[ids]
+        nb_t[:len(ids)] = n_bucket[ids]
+        tiers.append(TierData(ids, own, bkt, jnp.asarray(no_t, jnp.int32),
+                              jnp.asarray(nb_t, jnp.int32), C1=C1, C2=C2,
+                              Pt=Pt))
+        shard_real += (no_t * nb_t).reshape(D, Pt // D).sum(axis=1)
+        shard_pad += float(Pt // D) * C1 * C2
     sd = DeviceShuffledData(tiers, n_owned, n_bucket)
     n_shuffled = int(n_bucket.sum())
     stats.shuffle_wall_s = time.perf_counter() - t0
@@ -584,16 +716,23 @@ def _run_jobs_device(jobs, items, stats: StageStats) -> list[JobResult]:
     stats.n_partitions = P
     stats.codec = codec.name
     stats.engine = "device"
+    stats.n_shards = D
+    stats.shard_padded_ratio = tuple(
+        float(p / max(r, 1.0)) for p, r in zip(shard_pad, shard_real))
 
     # reduce: decode on-device, then one batched masked kernel pass per tier
+    # (sharded over the mesh's data axis + psum tier combine when present)
     t0 = time.perf_counter()
     reducers = tuple(j.reducer for j in jobs)
     totals = None
     for tier in tiers:
-        owned = codec.decode_device(*tier.owned_wire)
-        bucket = codec.decode_device(*tier.bucket_wire)
-        outs = tuple(r.reduce_partitions(owned, bucket, tier.n_owned,
-                                         tier.n_bucket) for r in reducers)
+        if D > 1:
+            outs = _reduce_tier_sharded(reducers, codec, tier, mesh)
+        else:
+            owned = codec.decode_device(*tier.owned_wire)
+            bucket = codec.decode_device(*tier.bucket_wire)
+            outs = tuple(r.reduce_partitions(owned, bucket, tier.n_owned,
+                                             tier.n_bucket) for r in reducers)
         totals = outs if totals is None else tuple(
             jax.tree.map(jnp.add, a, b) for a, b in zip(totals, outs))
     totals = jax.block_until_ready(totals)
@@ -616,9 +755,11 @@ def run_jobs(jobs, items, *, mesh=None, engine: str = "auto"
     Neighbor Statistics over the same catalog cost a single data pass).
 
     ``engine``: ``"device"`` (wire-dtype shuffle + tiered masked batched
-    reduce), ``"host"`` (numpy shuffle + ``lax.map`` reduce; supports mesh
-    sharding), or ``"auto"`` (device unless a data-axis mesh is given).
-    -> one JobResult per job, sharing a single StageStats."""
+    reduce; under a data-axis ``mesh`` the tiers shard over ``data`` and
+    tier partials combine with a psum), ``"host"`` (numpy shuffle +
+    ``lax.map`` reduce; the oracle-parity path, on or off mesh), or
+    ``"auto"`` (always device — both engines shard over any data-axis
+    mesh). -> one JobResult per job, sharing a single StageStats."""
     if not jobs:
         return []
     j0 = jobs[0]
@@ -635,20 +776,24 @@ def run_jobs(jobs, items, *, mesh=None, engine: str = "auto"
                 f"batched jobs must share one shuffle: {j.name!r} differs "
                 f"from {j0.name!r} in {', '.join(diffs)}")
     if engine == "auto":
-        engine = "host" if _data_axis_size(mesh) > 1 else "device"
+        engine = "device"
     stats = StageStats(job="+".join(j.name for j in jobs), engine=engine)
     if engine == "device":
-        if _data_axis_size(mesh) > 1:
-            raise ValueError(
-                "engine='device' runs single-process; use engine='host' "
-                "(or 'auto') for data-axis mesh sharding")
-        return _run_jobs_device(jobs, items, stats)
+        return _run_jobs_device(jobs, items, stats, mesh)
     if engine != "host":
         raise ValueError(f"unknown engine {engine!r}; "
                          "expected 'auto', 'device', or 'host'")
+    D = _data_axis_size(mesh)
     sd = shuffle_stage(items, j0.partitioner, c0, tile=j0.tile,
-                       pad_partitions_to=_data_axis_size(mesh),
+                       pad_partitions_to=D,
                        pad_value=j0.reducer.pad_value, stats=stats)
+    stats.n_shards = D
+    q = sd.owned.shape[0] // D
+    cells = (sd.n_owned.astype(np.float64)
+             * sd.n_bucket).reshape(D, q).sum(axis=1)
+    pad_cells = float(q) * sd.owned.shape[1] * sd.bucket.shape[1]
+    stats.shard_padded_ratio = tuple(
+        float(pad_cells / max(c, 1.0)) for c in cells)
     t0 = time.perf_counter()
     totals = jax.block_until_ready(
         reduce_stage([j.reducer for j in jobs], sd, mesh))

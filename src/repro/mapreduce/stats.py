@@ -44,6 +44,10 @@ class PairHistReducer(Reducer):
                                 self._cos_edges(),
                                 use_pallas=self.use_pallas)
 
+    def reduce_traceable(self):
+        from repro.kernels.zones_pairs.ops import masked_uses_pallas
+        return masked_uses_pallas(self.use_pallas)
+
     def finalize(self, total, sd: ShuffledData):
         cum = np.asarray(total).astype(np.int64)
         cum -= int(sd.n_owned.sum())   # self pairs (theta=0) hit every edge

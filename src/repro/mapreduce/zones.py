@@ -122,6 +122,10 @@ class PairCountReducer(Reducer):
                                  float(np.cos(self.radius)),
                                  use_pallas=self.use_pallas)
 
+    def reduce_traceable(self):
+        from repro.kernels.zones_pairs.ops import masked_uses_pallas
+        return masked_uses_pallas(self.use_pallas)
+
     def finalize(self, total, sd: ShuffledData):
         return (int(total) - int(sd.n_owned.sum())) // 2
 

@@ -121,6 +121,162 @@ def check_train_step_sharded():
     print(f"train modes OK: {losses}")
 
 
+def check_mapreduce_device_sharded():
+    """Sharded DEVICE engine: on an 8-device data mesh, engine="device"
+    (tier arrays sharded over ``data``, psum tier combine) must match the
+    host-engine mesh oracle BIT-EXACTLY for exact codecs, across the ragged
+    shard shapes that stress the phantom-partition padding:
+
+    - both shuffle index paths ("jnp" and "host") -> identical metadata,
+    - the traceable in-shard_map path (pure-jnp wordcount reducer, and the
+      pair kernels forced through Pallas interpret mode).
+
+    The ragged shard shapes (non-divisible tier counts, single-shard tiers,
+    zero-entry partitions, empty catalog) live in ``mapreduce-ragged``.
+    """
+    from repro.core.compat import make_mesh as mk
+    from repro.data import sky
+    from repro.mapreduce import (ZonePartitioner, neighbor_search_job,
+                                 neighbor_statistics_job, run_job, run_jobs,
+                                 token_histogram)
+    from repro.mapreduce import job as job_mod
+
+    mesh = mk((8,), ("data",))
+
+    # batched paper apps, identity + int16
+    for codec in ("identity", "int16"):
+        xyz = sky.make_catalog(1200, 7)
+        radius = 0.1
+        part = ZonePartitioner(radius)
+        edges = np.linspace(0.02, radius, 5)
+        jobs = [neighbor_search_job(radius, partitioner=part, tile=64,
+                                    codec=codec),
+                neighbor_statistics_job(edges / sky.ARCSEC, codec=codec,
+                                        partitioner=part, tile=64)]
+        rd = run_jobs(jobs, xyz, mesh=mesh, engine="device")
+        rh = run_jobs(jobs, xyz, mesh=mesh, engine="host")
+        r1 = run_jobs(jobs, xyz, engine="device")
+        assert rd[0].output == rh[0].output == r1[0].output, (
+            codec, rd[0].output, rh[0].output, r1[0].output)
+        np.testing.assert_array_equal(rd[1].output, rh[1].output)
+        np.testing.assert_array_equal(rd[1].output, r1[1].output)
+        if codec == "identity":
+            assert rd[0].output == sky.brute_force_pairs(xyz, radius)
+        st = rd[0].stats
+        assert st.engine == "device" and st.n_shards == 8
+        assert len(st.shard_padded_ratio) == 8
+
+    # engine="auto" now picks device on a data mesh
+    ra = run_job(neighbor_search_job(0.1, tile=64), xyz, mesh=mesh)
+    assert ra.stats.engine == "device"
+    assert ra.output == sky.brute_force_pairs(xyz, 0.1)
+
+    # wordcount on the mesh: the traceable pure-jnp in-shard_map path
+    toks = np.random.default_rng(1).integers(0, 500, 4000)
+    hd = token_histogram(toks, 500, n_partitions=8, tile=64, mesh=mesh,
+                         engine="device").output
+    hh = token_histogram(toks, 500, n_partitions=8, tile=64, mesh=mesh,
+                         engine="host").output
+    np.testing.assert_array_equal(hd, hh)
+    np.testing.assert_array_equal(hd, np.bincount(toks, minlength=500))
+
+    # both shuffle index impls produce identical results AND metadata
+    xyz = sky.make_catalog(700, 3)
+    j = neighbor_search_job(0.09, codec="int16", tile=64)
+    want = run_job(j, xyz, mesh=mesh, engine="device")
+    old = job_mod.SHUFFLE_INDEX_IMPL
+    job_mod.SHUFFLE_INDEX_IMPL = "jnp"
+    try:
+        got = run_job(j, xyz, mesh=mesh, engine="device")
+    finally:
+        job_mod.SHUFFLE_INDEX_IMPL = old
+    assert got.output == want.output
+    assert want.stats.shuffle_index_impl == "host"      # CPU backend default
+    assert got.stats.shuffle_index_impl == "jnp"
+    for f in ("shuffle_wire_bytes", "n_partitions", "reduce_padded_ratio",
+              "shard_padded_ratio", "reduce_bytes"):
+        assert getattr(got.stats, f) == getattr(want.stats, f), f
+
+    # traceable in-shard_map path: pair kernels through Pallas interpret,
+    # single job AND batched (two reducers fused in one shard_map region)
+    xyz = sky.make_catalog(400, 7)
+    part = ZonePartitioner(0.1)
+    edges = np.linspace(0.03, 0.1, 4)
+    jobs_pl = [neighbor_search_job(0.1, partitioner=part, tile=64,
+                                   use_pallas=True),
+               neighbor_statistics_job(edges / sky.ARCSEC, partitioner=part,
+                                       tile=64, use_pallas=True)]
+    jobs_bk = [neighbor_search_job(0.1, partitioner=part, tile=64),
+               neighbor_statistics_job(edges / sky.ARCSEC, partitioner=part,
+                                       tile=64)]
+    rp = run_jobs(jobs_pl, xyz, mesh=mesh, engine="device")
+    rb = run_jobs(jobs_bk, xyz, mesh=mesh, engine="device")
+    assert rp[0].output == rb[0].output
+    np.testing.assert_array_equal(rp[1].output, rb[1].output)
+    print("mapreduce sharded-device == host mesh oracle OK")
+
+
+def check_mapreduce_ragged_shards():
+    """Ragged shard shapes on an 8-device data mesh, sharded device engine
+    vs the host mesh oracle (bit-exact):
+
+    - tier partition counts not divisible by the data axis size (a 0.25-rad
+      zone layout gives ~13 zones over 8 shards),
+    - a skewed catalog whose crowded tier has fewer real partitions than
+      shards (the tier lands entirely on one shard; the rest are phantoms),
+    - zero-entry partitions (wordcount vocab < n_partitions, so five
+      partitions own nothing) and the zero-partition/empty-catalog case.
+    """
+    from repro.core.compat import make_mesh as mk
+    from repro.data import sky
+    from repro.mapreduce import (ZonePartitioner, neighbor_search_job,
+                                 neighbor_statistics_job, plan_tiers,
+                                 run_job, token_histogram)
+
+    mesh = mk((8,), ("data",))
+
+    # tier counts not divisible by 8
+    for codec in ("identity", "int16"):
+        for n, seed, radius in [(700, 3, 0.09), (150, 1, 0.25)]:
+            xyz = sky.make_catalog(n, seed)
+            j = neighbor_search_job(radius, codec=codec, tile=64)
+            d = run_job(j, xyz, mesh=mesh, engine="device").output
+            h = run_job(j, xyz, mesh=mesh, engine="host").output
+            assert d == h, (codec, n, d, h)
+
+    # skewed catalog: crowded tier has fewer real partitions than shards
+    rng = np.random.default_rng(11)
+    sk = sky.make_catalog(900, 1)
+    extra = sk[:1] + rng.normal(0, 1e-3, (600, 3))
+    sk = np.concatenate([sk, extra])
+    sk = (sk / np.linalg.norm(sk, axis=1, keepdims=True)).astype(np.float32)
+    j = neighbor_search_job(0.08, tile=64)
+    assert (run_job(j, sk, mesh=mesh, engine="device").output
+            == run_job(j, sk, mesh=mesh, engine="host").output)
+    part = ZonePartitioner(0.08)
+    keys = part.assign(sk)
+    no = np.bincount(keys, minlength=part.n_partitions(sk))
+    plan = plan_tiers(no, no * 2, 64, pad_partitions_to=8)
+    assert any(len(ids) < 8 for ids, _, _ in plan), (
+        "skew did not produce a sub-shard tier")
+
+    # zero-entry partitions + empty catalog
+    toks = np.random.default_rng(0).integers(0, 3, 1000)
+    hd = token_histogram(toks, 3, n_partitions=8, tile=64, mesh=mesh,
+                         engine="device").output
+    hh = token_histogram(toks, 3, n_partitions=8, tile=64, mesh=mesh,
+                         engine="host").output
+    np.testing.assert_array_equal(hd, hh)
+    np.testing.assert_array_equal(hd, np.bincount(toks, minlength=3))
+    xyz0 = np.zeros((0, 3), np.float32)
+    assert run_job(neighbor_search_job(0.05, tile=64), xyz0, mesh=mesh,
+                   engine="device").output == 0
+    np.testing.assert_array_equal(
+        run_job(neighbor_statistics_job([10.0, 20.0], tile=64), xyz0,
+                mesh=mesh, engine="device").output, [0, 0])
+    print("mapreduce ragged shards == host mesh oracle OK")
+
+
 def check_mapreduce_sharded():
     """Job engine: sharded-mesh results == mesh=None results, for both paper
     apps (batched over one shuffle) and the wordcount job."""
@@ -158,5 +314,7 @@ if __name__ == "__main__":
         "moe": check_moe_multidevice,
         "train": check_train_step_sharded,
         "mapreduce": check_mapreduce_sharded,
+        "mapreduce-device": check_mapreduce_device_sharded,
+        "mapreduce-ragged": check_mapreduce_ragged_shards,
     }
     checks[sys.argv[1]]()

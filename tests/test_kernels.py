@@ -87,13 +87,16 @@ def test_pair_hist_sweep(nbins):
 # ---------------------------------------------------------------------------
 
 # ragged per-partition real counts, including zero-size partitions, a
-# full-capacity partition, and a single-partition "tier"
+# full-capacity partition, a single-partition "tier", and an ALL-padding
+# batch (every count zero — what a phantom-only mesh shard hands the
+# kernels; they must return exactly zero, not NaN or garbage)
 MASKED_CASES = [
     # (P, C1, C2, n_owned, n_bucket)
     (4, 128, 256, (0, 128, 64, 1), (0, 256, 100, 3)),
     (3, 64, 64, (64, 64, 64), (64, 64, 64)),          # single size class
     (1, 256, 128, (200,), (90,)),                      # single partition
     (5, 64, 128, (0, 0, 10, 64, 33), (0, 5, 0, 128, 77)),
+    (3, 64, 64, (0, 0, 0), (0, 0, 0)),                 # all-padding shard
 ]
 
 

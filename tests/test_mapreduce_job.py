@@ -197,18 +197,25 @@ def test_engine_parity_batched_and_skewed():
 
 def test_engine_parity_jnp_index_path():
     """The pure-jnp argsort/scatter path (used on accelerator backends) must
-    match the numpy index path used on CPU."""
+    match the numpy index path used on CPU — same results AND the same
+    shuffle metadata, with the resolved choice recorded in StageStats so an
+    "auto" run is never ambiguous about which path built its tiers."""
     from repro.mapreduce import job as job_mod
     xyz = sky.make_catalog(700, 3)
     sjob = neighbor_search_job(0.09, codec="int16", tile=64)
-    want = run_job(sjob, xyz, engine="device").output
+    want = run_job(sjob, xyz, engine="device")
+    assert want.stats.shuffle_index_impl == "host"    # CPU backend default
     old = job_mod.SHUFFLE_INDEX_IMPL
     job_mod.SHUFFLE_INDEX_IMPL = "jnp"
     try:
-        got = run_job(sjob, xyz, engine="device").output
+        got = run_job(sjob, xyz, engine="device")
     finally:
         job_mod.SHUFFLE_INDEX_IMPL = old
-    assert got == want
+    assert got.output == want.output
+    assert got.stats.shuffle_index_impl == "jnp"
+    for f in ("shuffle_wire_bytes", "shuffle_raw_bytes", "n_partitions",
+              "reduce_padded_ratio", "shard_padded_ratio", "reduce_bytes"):
+        assert getattr(got.stats, f) == getattr(want.stats, f), f
 
 
 def test_device_engine_stats_and_wire_accounting():
@@ -223,15 +230,72 @@ def test_device_engine_stats_and_wire_accounting():
     assert "reduce_padded_ratio" in st.to_dict()
 
 
-def test_device_engine_rejects_data_mesh():
+def test_device_engine_accepts_any_mesh():
+    """Device is the default engine everywhere now — ``engine="auto"`` picks
+    it even when a mesh is present (the data-axis fallback to host is gone;
+    multi-shard parity runs in md_check's ``mapreduce-device`` mode)."""
     from repro.core.compat import make_mesh
-    mesh = make_mesh((1,), ("model",))       # no data axis: device ok
     xyz = sky.make_catalog(100, 0)
     job = neighbor_search_job(0.1, tile=64)
-    assert run_job(job, xyz, mesh=mesh, engine="device").output == \
-        run_job(job, xyz, engine="host").output
+    want = run_job(job, xyz, engine="host").output
+    for mesh in (make_mesh((1,), ("model",)), make_mesh((1, 1),
+                                                        ("data", "model"))):
+        res = run_job(job, xyz, mesh=mesh)              # engine="auto"
+        assert res.stats.engine == "device"
+        assert res.output == want
     with pytest.raises(ValueError):
         run_jobs([job], xyz, engine="nonsense")
+
+
+def test_plan_tiers_pad_partitions_constraint():
+    """``pad_partitions_to`` charges phantom rows in the cost search and the
+    engine pads every tier to a multiple of it; a partition-count floor that
+    would split wastefully under a wide mesh collapses to fewer tiers."""
+    from repro.mapreduce import plan_tiers
+    n_owned = np.array([10, 12, 9, 300, 11, 8, 290, 13])
+    n_bucket = n_owned * 2
+    plan1 = plan_tiers(n_owned, n_bucket, 64)
+    for pad in (1, 4, 8):
+        plan = plan_tiers(n_owned, n_bucket, 64, pad_partitions_to=pad)
+        # every partition appears exactly once across tiers
+        all_ids = np.sort(np.concatenate([ids for ids, _, _ in plan]))
+        np.testing.assert_array_equal(all_ids, np.arange(len(n_owned)))
+        # no empty tiers ever (the "zero-partition tier" cannot occur)
+        assert all(len(ids) > 0 for ids, _, _ in plan)
+        # padded cost never better than the unpadded plan's padded cost
+        def padded_cells(p):
+            return sum(-(-len(ids) // pad) * pad * C1 * C2
+                       for ids, C1, C2 in p)
+        assert padded_cells(plan) <= padded_cells(plan1)
+
+
+def test_device_engine_phantom_partition_accounting():
+    """Tier Pt padding (phantom partitions) shows up in the per-shard stats:
+    n_shards and a shard_padded_ratio per shard, present even off-mesh."""
+    xyz = sky.make_catalog(500, 2)
+    res = run_job(neighbor_search_job(0.08, tile=64), xyz, engine="device")
+    st = res.stats
+    assert st.n_shards == 1
+    assert len(st.shard_padded_ratio) == 1
+    assert st.shard_padded_ratio[0] == pytest.approx(st.reduce_padded_ratio)
+    host = run_job(neighbor_search_job(0.08, tile=64), xyz, engine="host")
+    assert host.stats.n_shards == 1
+    assert len(host.stats.shard_padded_ratio) == 1
+
+
+@pytest.mark.slow
+def test_ragged_shards_match_host_mesh_oracle():
+    """Tier counts not divisible by the data axis, a tier landing entirely
+    on one shard, and zero-entry partitions / the empty catalog — all must
+    match the host mesh oracle exactly (8 host devices, subprocess)."""
+    script = os.path.join(os.path.dirname(__file__), "md_check.py")
+    env = dict(os.environ)
+    env.pop("JAX_PLATFORMS", None)
+    r = subprocess.run([sys.executable, script, "mapreduce-ragged"],
+                       capture_output=True, text=True, timeout=900, env=env)
+    assert r.returncode == 0, (
+        f"mapreduce-ragged failed:\n{r.stdout}\n{r.stderr}")
+    assert "OK" in r.stdout
 
 
 def test_device_engine_empty_catalog():

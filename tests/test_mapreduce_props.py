@@ -1,0 +1,165 @@
+"""Property-based invariants for the MapReduce stack (hypothesis).
+
+The parity surface the mesh-sharded device engine stands on, stated as
+properties over random catalogs, skewed zone distributions, and vocab
+sizes instead of hand-picked examples:
+
+1. codec contracts — exact codecs round-trip BIT-identically (host and
+   device transforms), lossy codecs stay inside ``error_bound``, and the
+   static ``nbytes`` formula always matches the real payload;
+2. partitioner coverage — for every within-radius pair (i, j), each
+   endpoint's zone bucket contains the other endpoint (owned or border
+   replica), under both the host ``replicas`` hook and the device
+   ``bucket_entries_device`` stream (the ``REPLICA_EPS`` margin makes the
+   device set a safe superset, never a subset);
+3. engine parity — ``engine="device"`` output is bit-identical to
+   ``engine="host"`` for search, stats, and wordcount with exact codecs,
+   under both shuffle index paths.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")   # optional dev dependency
+from hypothesis import given, settings, strategies as st
+
+from repro.data import sky
+from repro.mapreduce import (ZonePartitioner, available_codecs, get_codec,
+                             neighbor_search_job, neighbor_statistics_job,
+                             run_job, token_histogram)
+from repro.mapreduce import job as job_mod
+
+settings.register_profile("ci", deadline=None, max_examples=10,
+                          derandomize=True)
+settings.load_profile("ci")
+
+
+def _catalog(n, seed, clump):
+    """Random unit catalog; ``clump`` piles half the points into one tiny
+    dec band so the tier planner sees real skew."""
+    xyz = sky.make_catalog(max(n, 1), seed)[:n]
+    if clump and n >= 8:
+        rng = np.random.default_rng(seed + 1)
+        k = n // 2
+        xyz = xyz.copy()
+        xyz[:k] = xyz[k:k + 1] + rng.normal(0, 1e-3, (k, 3))
+        xyz /= np.linalg.norm(xyz, axis=1, keepdims=True)
+    return xyz.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# 1. codec contracts
+# ---------------------------------------------------------------------------
+
+@given(name=st.sampled_from(sorted(available_codecs())),
+       n=st.integers(1, 2000), d=st.integers(1, 4), seed=st.integers(0, 99))
+def test_codec_roundtrip_and_accounting(name, n, d, seed):
+    codec = get_codec(name)
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1.0, 1.0, (n, d)).astype(np.float32)
+    back = codec.roundtrip(x)
+    if codec.exact:
+        assert np.array_equal(back, x)            # bit-identical, no NaN outs
+    else:
+        assert np.max(np.abs(back - x)) <= codec.error_bound(x) + 1e-7
+    enc = codec.encode(x)
+    assert enc.wire_bytes == codec.nbytes(x.size)
+    assert sum(a.nbytes for a in enc.arrays) == enc.wire_bytes
+
+
+@given(n=st.integers(1, 500), d=st.integers(1, 4), seed=st.integers(0, 99))
+def test_exact_codec_device_transforms_bit_match_host(n, d, seed):
+    """identity/int16 device encode/decode == the host wire trip, bitwise —
+    the contract that makes device==host engine parity possible at all."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1.0, 1.0, (n, d)).astype(np.float32)
+    for name in ("identity", "int16"):
+        codec = get_codec(name)
+        dev = np.asarray(codec.decode_device(*codec.encode_device(
+            jnp.asarray(x))))
+        assert np.array_equal(dev, codec.roundtrip(x)), name
+
+
+# ---------------------------------------------------------------------------
+# 2. partitioner assign/replicas coverage under REPLICA_EPS
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(2, 180), seed=st.integers(0, 99),
+       radius=st.floats(0.02, 0.4), clump=st.booleans())
+def test_zone_buckets_cover_every_within_radius_pair(n, seed, radius, clump):
+    """For every pair with angular distance <= radius (f64 oracle), each
+    endpoint's zone bucket must contain the other endpoint. Holds for the
+    host ``replicas`` hook and for the device entry stream, whose valid set
+    must additionally be a superset of the host replica set (REPLICA_EPS
+    margins may only ADD copies, never drop one)."""
+    import jax.numpy as jnp
+    xyz = _catalog(n, seed, clump)
+    part = ZonePartitioner(radius)
+    P = part.n_partitions(xyz)
+    keys = part.assign(xyz)
+    assert keys.min() >= 0 and keys.max() < P
+
+    buckets = [set(np.flatnonzero(keys == k)) for k in range(P)]
+    host_pairs = set()
+    for dest, idx in part.replicas(xyz, keys, P):
+        assert 0 <= dest < P
+        buckets[dest].update(int(i) for i in idx)
+        host_pairs.update((int(dest), int(i)) for i in idx)
+
+    dots = np.clip(xyz.astype(np.float64) @ xyz.astype(np.float64).T, -1, 1)
+    ii, jj = np.nonzero(dots >= np.cos(radius))
+    for i, j in zip(ii, jj):
+        assert j in buckets[keys[i]], (i, j, keys[i], keys[j])
+
+    dest_d, src_d, valid_d = part.bucket_entries_device(
+        jnp.asarray(xyz), jnp.asarray(keys), P)
+    dev_pairs = {(int(d), int(s)) for d, s, v in
+                 zip(np.asarray(dest_d), np.asarray(src_d),
+                     np.asarray(valid_d)) if v}
+    own_pairs = {(int(k), int(i)) for i, k in enumerate(keys)}
+    assert dev_pairs >= own_pairs
+    assert dev_pairs >= host_pairs        # device may replicate MORE, not less
+
+
+# ---------------------------------------------------------------------------
+# 3. device == host bit parity across engines
+# ---------------------------------------------------------------------------
+
+@given(n=st.sampled_from([0, 1, 37, 160, 400]), seed=st.integers(0, 30),
+       radius=st.sampled_from([0.06, 0.12, 0.3]),
+       codec=st.sampled_from(["identity", "int16"]), clump=st.booleans(),
+       index_impl=st.sampled_from(["host", "jnp"]))
+def test_search_and_stats_device_host_parity(n, seed, radius, codec, clump,
+                                             index_impl):
+    xyz = _catalog(n, seed, clump)
+    edges = np.linspace(radius / 3, radius, 4)
+    old = job_mod.SHUFFLE_INDEX_IMPL
+    job_mod.SHUFFLE_INDEX_IMPL = index_impl
+    try:
+        sjob = neighbor_search_job(radius, codec=codec, tile=64)
+        hjob = neighbor_statistics_job(edges / sky.ARCSEC, codec=codec,
+                                       tile=64)
+        assert (run_job(sjob, xyz, engine="device").output
+                == run_job(sjob, xyz, engine="host").output)
+        np.testing.assert_array_equal(
+            run_job(hjob, xyz, engine="device").output,
+            run_job(hjob, xyz, engine="host").output)
+    finally:
+        job_mod.SHUFFLE_INDEX_IMPL = old
+
+
+@given(n=st.integers(0, 3000), vocab=st.integers(2, 1000),
+       n_parts=st.sampled_from([3, 8, 16]), seed=st.integers(0, 99),
+       codec=st.sampled_from(["identity", "int16"]), zipf=st.booleans())
+def test_wordcount_device_host_parity(n, vocab, n_parts, seed, codec, zipf):
+    rng = np.random.default_rng(seed)
+    if zipf:   # skewed token distribution (a few very hot tokens)
+        toks = np.minimum(rng.zipf(1.6, size=n) - 1, vocab - 1)
+    else:
+        toks = rng.integers(0, vocab, n)
+    dev = token_histogram(toks, vocab, n_partitions=n_parts, tile=64,
+                          codec=codec, engine="device").output
+    host = token_histogram(toks, vocab, n_partitions=n_parts, tile=64,
+                           codec=codec, engine="host").output
+    np.testing.assert_array_equal(dev, host)
+    np.testing.assert_array_equal(dev, np.bincount(toks, minlength=vocab))

@@ -42,3 +42,11 @@ def test_moe_expert_parallel_multidevice():
                     "manual shard_map (current jax)")
 def test_train_modes_multidevice():
     assert "OK" in _run("train")
+
+
+@pytest.mark.slow
+def test_mapreduce_device_sharded_multidevice():
+    """Sharded device engine == host mesh oracle (bit-exact), 8 host devices:
+    ragged tier counts, single-shard tiers, empty partitions, both shuffle
+    index paths, and the traceable in-shard_map reduce."""
+    assert "OK" in _run("mapreduce-device")
