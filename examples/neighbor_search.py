@@ -7,16 +7,24 @@ are built from pluggable stages — ``ZonePartitioner`` (map), a registered
 which also batches both apps over a single shuffle. Every run prints its
 ``StageStats`` and the per-job Amdahl numbers (the paper's Table-4 analysis).
 
+The last section streams the same job out-of-core: the catalog lives in a
+memmap file and crosses the engine split-by-split (HDFS-block analogues)
+with the next split's read + transfer double-buffered under the current
+split's compute — same answer, bounded memory, and the exposed-vs-hidden
+I/O split printed from ``StageStats``.
+
     PYTHONPATH=src python examples/neighbor_search.py [--n 50000]
 """
 import argparse
+import os
+import tempfile
 
 import numpy as np
 
-from repro.data import sky
+from repro.data import MemmapCatalogSplits, sky
 from repro.mapreduce import (ZonePartitioner, available_codecs,
                              neighbor_search_job, neighbor_statistics_job,
-                             run_job, run_jobs)
+                             run_job, run_job_streaming, run_jobs)
 
 
 def show(res, label):
@@ -65,6 +73,21 @@ def main():
                                  tile=256)], xyz)
     print(f"  pairs={search.output}, histogram={stats.output.tolist()}")
     show(search, "batched search+stats")
+
+    print("-- out-of-core: the same job streamed from a memmap catalog --")
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "catalog.f32")
+        MemmapCatalogSplits.write(path, xyz)        # stand-in for a big file
+        src = MemmapCatalogSplits(path, d=3,
+                                  rows_per_split=max(args.n // 8, 1))
+        res = run_job_streaming(
+            neighbor_search_job(args.radius, codec="int16", tile=256), src)
+        st = res.stats
+        print(f"  pairs={res.output} over {st.n_splits} splits "
+              f"(per-split rows<={src.rows_per_split}); split I/O: "
+              f"{st.overlap_hidden_s:.3f}s hidden under compute, "
+              f"{st.fetch_wall_s:.3f}s exposed "
+              f"(overlap={st.overlap_fraction:.0%})")
 
 
 if __name__ == "__main__":

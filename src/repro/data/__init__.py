@@ -1,4 +1,6 @@
 from repro.data.pipeline import (
-    Pipeline, PipelineConfig, SyntheticTokens, MemmapTokens,
+    ArraySplits, MemmapCatalogSplits, MemmapTokens, Pipeline, PipelineConfig,
+    Prefetcher, SplitSource, SyntheticCatalogSplits, SyntheticTokens,
+    TokenBlockSplits,
 )
 from repro.data import sky

@@ -1,21 +1,39 @@
-"""Deterministic sharded data pipeline.
+"""Deterministic sharded data pipeline + catalog split sources.
 
-Two sources:
+Token sources (LM side):
 - ``SyntheticTokens``: stateless, hash-based tokens — any (step, position) is
   reproducible on any host without coordination (important for elastic restarts:
   a rescaled job replays the exact same global batch sequence).
 - ``MemmapTokens``: packed binary token file via np.memmap (the 'direct I/O' spirit:
   no per-example deserialization, reads go straight from page cache to the array).
 
-The pipeline yields *host-local* slices of the global batch given (host_id, n_hosts),
-with a background prefetch thread (depth-bounded queue).
+``Pipeline`` yields *host-local* slices of the global batch given
+(host_id, n_hosts), with a background prefetch thread (depth-bounded queue);
+it is a context manager, so the thread can never leak past a ``with`` block.
+
+Split sources (MapReduce side): a ``SplitSource`` is the HDFS-block analogue
+— a finite sequence of catalog splits that the streaming executor
+(``mapreduce/executor.py``) pulls one at a time, so the full catalog never
+has to exist in device memory at once. ``ArraySplits`` chunks an in-memory
+array (the one-split case is how ``run_job`` delegates to the executor),
+``MemmapCatalogSplits`` reads row chunks of a packed float32 file,
+``SyntheticCatalogSplits`` generates sky-catalog chunks deterministically
+per split, and ``TokenBlockSplits`` adapts the token sources above into
+wordcount-shaped ``[rows, 1]`` splits.
+
+Both consumers share one ``Prefetcher``: a depth-bounded background producer
+thread that reports, per item, how long the producer spent building it and
+how long the consumer was actually blocked waiting — the split between
+*hidden* and *exposed* I/O that the executor's ``overlap_hidden_s``
+accounting is built on.
 """
 from __future__ import annotations
 
 import queue
 import threading
+import time
 from dataclasses import dataclass
-from typing import Iterator
+from typing import Callable, Iterator
 
 import numpy as np
 
@@ -49,16 +67,230 @@ class MemmapTokens:
 
     def block(self, row0: int, rows: int, cols: int) -> np.ndarray:
         assert cols == self.seq_len
-        idx = (np.arange(row0, row0 + rows) % self.n_rows)
         out = np.empty((rows, cols), np.int32)
-        for k, r in enumerate(idx):          # rows may wrap; keep simple
-            out[k] = self.arr[r * cols:(r + 1) * cols]
+        # contiguous slice reads; the loop only runs when the range wraps
+        # around the end of the file (once per full pass)
+        got, r = 0, row0 % self.n_rows
+        while got < rows:
+            take = min(rows - got, self.n_rows - r)
+            out[got:got + take] = self.arr[r * cols:(r + take) * cols
+                                           ].reshape(take, cols)
+            got += take
+            r = 0
         return out
 
     @staticmethod
     def write(path: str, tokens: np.ndarray):
         np.asarray(tokens, np.int32).tofile(path)
 
+
+class Prefetcher:
+    """Depth-bounded background producer (the shared prefetch-thread pattern
+    behind ``Pipeline`` and the streaming executor's double buffer).
+
+    ``produce(k)`` is called on a daemon thread for k = start, start+1, ...
+    (stopping after ``n`` items when ``n`` is given) and results queue up to
+    ``depth`` deep. ``get()`` blocks for the next item and returns
+    ``(k, item, wait_s, prep_s)``: ``prep_s`` is how long the producer spent
+    building the item, ``wait_s`` how long the *consumer* was blocked — so
+    ``prep_s - wait_s`` of I/O was hidden under the consumer's own work.
+    Returns ``None`` once the source is exhausted. Context manager: the
+    thread is stopped (and joined) on exit, success or failure.
+    """
+
+    def __init__(self, produce: Callable[[int], object], *, depth: int = 2,
+                 start: int = 0, n: int | None = None):
+        self._produce = produce
+        self._q: queue.Queue = queue.Queue(maxsize=max(depth, 1))
+        self._stop = threading.Event()
+        self._start_k = start
+        self._n = n
+        self._thread: threading.Thread | None = None
+
+    def start(self) -> "Prefetcher":
+        if self._thread is None:
+            self._thread = threading.Thread(target=self._worker, daemon=True)
+            self._thread.start()
+        return self
+
+    def _put(self, rec) -> bool:
+        while not self._stop.is_set():
+            try:
+                self._q.put(rec, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _worker(self):
+        k = self._start_k
+        while not self._stop.is_set():
+            if self._n is not None and k >= self._start_k + self._n:
+                self._put(None)
+                return
+            t0 = time.perf_counter()
+            try:
+                item = self._produce(k)
+            except BaseException as e:         # surface in the consumer
+                self._put(e)
+                return
+            self._put((k, item, time.perf_counter() - t0))
+            k += 1
+
+    def get(self):
+        if self._thread is None:
+            self.start()
+        t0 = time.perf_counter()
+        rec = self._q.get()
+        wait = time.perf_counter() - t0
+        if rec is None:
+            return None
+        if isinstance(rec, BaseException):
+            raise rec
+        k, item, prep = rec
+        return k, item, wait, prep
+
+    def stop(self):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=2.0)
+
+    def __enter__(self) -> "Prefetcher":
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+
+# ---------------------------------------------------------------------------
+# SplitSource: HDFS-block-analog catalog splits for the streaming executor
+# ---------------------------------------------------------------------------
+
+class SplitSource:
+    """A finite, ordered sequence of catalog splits (each a ``[rows, d]`` or
+    ``[rows]`` numpy array). The streamed dataset is *defined* as the row
+    concatenation of its splits; the streaming executor pulls splits one at
+    a time (prefetched), so only one split plus the accumulated partials
+    need exist in memory. ``n_splits`` must be >= 1 (an empty dataset is one
+    empty split)."""
+
+    def n_splits(self) -> int:
+        raise NotImplementedError
+
+    def split(self, k: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def materialize(self) -> np.ndarray:
+        """The whole dataset at once (oracle/parity runs — defeats the point
+        of streaming for anything big)."""
+        return np.concatenate([np.atleast_1d(self.split(k))
+                               for k in range(self.n_splits())], axis=0)
+
+
+class ArraySplits(SplitSource):
+    """An in-memory array cut at explicit row ``boundaries`` (or into
+    ``n_splits`` near-equal chunks). ``ArraySplits(x)`` — one split — is the
+    degenerate source ``run_job`` uses to delegate to the executor."""
+
+    def __init__(self, items, n_splits: int = 1,
+                 boundaries: "list[int] | None" = None):
+        self.items = np.asarray(items)
+        n = len(self.items)
+        if boundaries is None:
+            n_splits = max(1, min(int(n_splits), max(n, 1)))
+            step = -(-max(n, 1) // n_splits)
+            boundaries = list(range(step, n, step))[:n_splits - 1]
+        bounds = [0, *sorted(int(b) for b in boundaries), n]
+        assert all(0 <= b <= n for b in bounds), (bounds, n)
+        self._bounds = bounds
+
+    def n_splits(self) -> int:
+        return len(self._bounds) - 1
+
+    def split(self, k: int) -> np.ndarray:
+        return self.items[self._bounds[k]:self._bounds[k + 1]]
+
+
+class MemmapCatalogSplits(SplitSource):
+    """Row chunks of a packed float32 ``[n_rows, d]`` catalog file — the
+    out-of-core source: each ``split`` reads one chunk through the page
+    cache; nothing ever holds the whole catalog."""
+
+    def __init__(self, path: str, d: int, rows_per_split: int):
+        import os
+        self.arr = (np.zeros(0, np.float32)       # mmap rejects empty files
+                    if os.path.getsize(path) == 0
+                    else np.memmap(path, dtype=np.float32, mode="r"))
+        self.d = int(d)
+        self.n_rows = self.arr.shape[0] // self.d
+        self.rows_per_split = int(rows_per_split)
+        assert self.rows_per_split >= 1
+
+    def n_splits(self) -> int:
+        return max(1, -(-self.n_rows // self.rows_per_split))
+
+    def split(self, k: int) -> np.ndarray:
+        lo = k * self.rows_per_split
+        hi = min(lo + self.rows_per_split, self.n_rows)
+        return np.array(self.arr[lo * self.d:hi * self.d]
+                        ).reshape(hi - lo, self.d)
+
+    @staticmethod
+    def write(path: str, rows: np.ndarray):
+        np.asarray(rows, np.float32).tofile(path)
+
+
+class SyntheticCatalogSplits(SplitSource):
+    """Deterministic synthetic sky-catalog splits: split ``k`` is
+    ``sky.make_catalog(rows_k, seed=mix(seed, k))``, so any split is
+    regenerable independently (no catalog file, no coordination) and the
+    streamed catalog is the concatenation of the per-split chunks."""
+
+    def __init__(self, n_rows: int, rows_per_split: int, seed: int = 0):
+        self.n_rows = int(n_rows)
+        self.rows_per_split = int(rows_per_split)
+        self.seed = int(seed)
+        assert self.rows_per_split >= 1
+
+    def n_splits(self) -> int:
+        return max(1, -(-self.n_rows // self.rows_per_split))
+
+    def split(self, k: int) -> np.ndarray:
+        from repro.data import sky
+        lo = k * self.rows_per_split
+        rows = min(self.rows_per_split, self.n_rows - lo)
+        return sky.make_catalog(max(rows, 0),
+                                seed=(self.seed * 1_000_003 + k) & 0x7FFFFFFF)
+
+
+class TokenBlockSplits(SplitSource):
+    """Adapts a token source (``SyntheticTokens``/``MemmapTokens``) into
+    wordcount-shaped splits: split ``k`` is rows
+    ``[k*rows_per_split, (k+1)*rows_per_split)`` of the token matrix,
+    flattened to ``[rows*seq_len, 1]`` float32 — the streaming executor's
+    input schema."""
+
+    def __init__(self, source, seq_len: int, rows_per_split: int,
+                 n_splits: int, start_row: int = 0):
+        self.source = source
+        self.seq_len = int(seq_len)
+        self.rows_per_split = int(rows_per_split)
+        self._n = int(n_splits)
+        self.start_row = int(start_row)
+        assert self._n >= 1 and self.rows_per_split >= 1
+
+    def n_splits(self) -> int:
+        return self._n
+
+    def split(self, k: int) -> np.ndarray:
+        block = self.source.block(self.start_row + k * self.rows_per_split,
+                                  self.rows_per_split, self.seq_len)
+        return np.asarray(block, np.float32).reshape(-1, 1)
+
+
+# ---------------------------------------------------------------------------
+# LM batch pipeline
+# ---------------------------------------------------------------------------
 
 @dataclass
 class PipelineConfig:
@@ -71,15 +303,16 @@ class PipelineConfig:
 
 
 class Pipeline:
+    """Host-local batch stream with background prefetch. Context manager:
+    ``with Pipeline(src, cfg) as pipe: ...`` starts the prefetch thread on
+    entry and always stops it on exit (tests can't leak the thread)."""
+
     def __init__(self, source, cfg: PipelineConfig):
         assert cfg.global_batch % cfg.n_hosts == 0
         self.source = source
         self.cfg = cfg
         self.local_batch = cfg.global_batch // cfg.n_hosts
-        self._q: queue.Queue = queue.Queue(maxsize=max(cfg.prefetch, 1))
-        self._stop = threading.Event()
-        self._step = cfg.start_step
-        self._thread: threading.Thread | None = None
+        self._pf: Prefetcher | None = None
 
     def _row0(self, step: int) -> int:
         return (step * self.cfg.global_batch +
@@ -90,30 +323,28 @@ class Pipeline:
         return self.source.block(self._row0(step), self.local_batch,
                                  self.cfg.seq_len)
 
-    def _worker(self):
-        step = self._step
-        while not self._stop.is_set():
-            b = self.batch_at(step)
-            while not self._stop.is_set():
-                try:
-                    self._q.put((step, b), timeout=0.1)
-                    break
-                except queue.Full:
-                    continue
-            step += 1
-
     def start(self):
-        self._thread = threading.Thread(target=self._worker, daemon=True)
-        self._thread.start()
+        if self._pf is None:
+            self._pf = Prefetcher(self.batch_at, depth=self.cfg.prefetch,
+                                  start=self.cfg.start_step).start()
         return self
 
     def stop(self):
-        self._stop.set()
-        if self._thread:
-            self._thread.join(timeout=2.0)
+        if self._pf is not None:
+            self._pf.stop()
+            self._pf = None
+
+    def __enter__(self) -> "Pipeline":
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
 
     def __iter__(self) -> Iterator[tuple[int, np.ndarray]]:
-        if self._thread is None:
-            self.start()
+        self.start()
         while True:
-            yield self._q.get()
+            rec = self._pf.get()
+            if rec is None:                     # unbounded source: no end
+                return
+            step, batch, _, _ = rec
+            yield step, batch

@@ -1,2 +1,3 @@
-from repro.ft.stragglers import StragglerMonitor, StragglerConfig
+from repro.ft.stragglers import (SpeculativeConfig, SpeculativePolicy,
+                                 StragglerConfig, StragglerMonitor)
 from repro.ft.coordinator import Coordinator, CoordinatorConfig, State

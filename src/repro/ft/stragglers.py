@@ -7,8 +7,15 @@ flagged. Mitigation ladder (in order):
 1. rebalance: shift microbatch quota away from the straggler (keeps the mesh),
 2. exclude: drop the host and trigger an elastic remesh via checkpoint restore.
 
+``SpeculativePolicy`` is the MapReduce-side analogue — Hadoop's speculative
+execution as pure policy: the streaming executor
+(``mapreduce/executor.py``) feeds it (and/or a ``StragglerMonitor``) per-split
+wall times; a running split whose elapsed time exceeds ``slowdown x`` the
+median completed-split wall is a re-dispatch candidate, slowest first, each
+split cloned at most ``max_clones`` times.
+
 Pure policy logic — deterministic and unit-testable with synthetic timings; the
-launcher wires it to real step times.
+launcher wires it to real step/split times.
 """
 from __future__ import annotations
 
@@ -75,3 +82,58 @@ class StragglerMonitor:
             new_quota[h] += taken / len(others)
         self.quota = new_quota
         return {"action": "rebalance", "host": worst, "quota": new_quota}
+
+
+@dataclasses.dataclass
+class SpeculativeConfig:
+    slowdown: float = 1.5       # elapsed > k x median completed wall -> slow
+    min_finished: int = 3       # completed splits needed before judging
+    max_clones: int = 1         # re-dispatches allowed per split
+
+
+class SpeculativePolicy:
+    """Hadoop's speculative re-execution as pure, clock-free policy.
+
+    The caller reports ``finished(split, wall_s)`` for completed splits and
+    ``running(split, elapsed_s)`` for in-flight ones (elapsed measured by
+    the caller — no wall clock in here, so decisions replay exactly in
+    tests). ``propose()`` picks the slowest running split whose elapsed
+    already exceeds ``slowdown x`` the median completed wall — by then a
+    fresh re-execution on a healthy worker is expected to beat the original
+    — unless that split has been cloned ``max_clones`` times. The winner of
+    original-vs-clone is whichever calls ``finished`` first; duplicates are
+    idempotent because split results are deterministic."""
+
+    def __init__(self, cfg: SpeculativeConfig | None = None):
+        self.cfg = cfg or SpeculativeConfig()
+        self.walls: list[float] = []
+        self._running: dict[int, float] = {}
+        self.clones: dict[int, int] = defaultdict(int)
+
+    def running(self, split: int, elapsed_s: float):
+        self._running[split] = float(elapsed_s)
+
+    def finished(self, split: int, wall_s: float):
+        self._running.pop(split, None)
+        self.walls.append(float(wall_s))
+
+    def record(self, split: int, wall_s: float):
+        """StragglerMonitor-shaped alias, so the streaming executor can feed
+        either monitor through one ``straggler_monitor=`` hook."""
+        self.finished(split, wall_s)
+
+    def propose(self) -> dict:
+        """-> {"action": "none"} | {"action": "speculate", "split": s,
+        "elapsed_s": t, "expected_s": median} (slowest eligible split)."""
+        if len(self.walls) < self.cfg.min_finished or not self._running:
+            return {"action": "none"}
+        med = float(np.median(self.walls))
+        cands = [(t, s) for s, t in self._running.items()
+                 if t > self.cfg.slowdown * med
+                 and self.clones[s] < self.cfg.max_clones]
+        if not cands:
+            return {"action": "none"}
+        t, s = max(cands)
+        self.clones[s] += 1
+        return {"action": "speculate", "split": s, "elapsed_s": t,
+                "expected_s": med}

@@ -2,10 +2,13 @@
 
 The original hard-coded pipeline (``bucket_by_zone`` with a
 ``compress_coords`` boolean + ``sharded_zone_reduce``) is kept for backward
-compatibility; both delegate to the composable engine in
-``mapreduce/job.py`` (``shuffle_stage`` / ``reduce_stage``), with the codec
-chosen from the registry in ``mapreduce/codecs.py``. New code should build a
-``MapReduceJob`` and call ``run_job``/``run_jobs`` instead.
+compatibility; both delegate to the host-engine stages in
+``mapreduce/job.py`` (``shuffle_stage`` / ``reduce_stage``) — the same
+stages the split-streaming executor (``mapreduce/executor.py``) now runs
+per split — with the codec chosen from the registry in
+``mapreduce/codecs.py``. New code should build a ``MapReduceJob`` and call
+``run_job``/``run_jobs`` (or ``run_job_streaming`` over a ``SplitSource``
+for out-of-core catalogs) instead.
 """
 from __future__ import annotations
 

@@ -1,0 +1,358 @@
+"""Split-streaming MapReduce executor: the four-stage pipeline
+map -> combine -> shuffle -> reduce over HDFS-block-analog catalog splits.
+
+The paper's whole premise is streaming — Hadoop moves block-sized splits
+through the pipeline and the win on low-power nodes comes from keeping
+sequential I/O flowing while shrinking CPU cost per byte. This module makes
+the engine that shape: a ``SplitSource`` (``data/pipeline.py``) feeds splits
+one at a time, each split runs the SAME map/shuffle/reduce stages as the
+monolithic path (``run_job(job, xyz)`` is literally the one-split case), and
+two things keep memory and wall time bounded:
+
+- **Map-side combine** (Hadoop's Combiner). A pluggable ``Combiner`` merges
+  per-split partials on device, so only combined accumulators persist across
+  splits: datasets larger than device memory stream at full engine speed.
+  The default is derived from the ``Reducer`` (``Reducer.combiner()``) for
+  commutative-monoid outputs — wordcount's token histogram pre-aggregates
+  each split to (token, count) rows before the shuffle, cutting shuffle wire
+  bytes by the split's duplication factor, exactly the paper's
+  shrink-bytes-before-the-boundary move. Reducers whose kernels couple rows
+  across items (pair counting: a pair can span two splits) have no valid
+  combiner; their splits accumulate as wire-dtype ``MappedSplit`` streams
+  (Hadoop's shuffle spill — the reduce starts when the last map ends) and
+  one global reduce runs at the end. Bit-identical either way for exact
+  codecs: bucket contents are the same multisets and partition reductions
+  are commutative integer sums.
+
+- **Transfer/compute overlap** (double buffering). A ``Prefetcher`` thread
+  fetches, pre-combines, and ``jax.device_put``s split k+1 while split k is
+  still being encoded/reduced on the main thread. ``StageStats`` splits the
+  I/O into ``fetch_wall_s`` (exposed — the executor actually waited) and
+  ``overlap_hidden_s`` (hidden under compute), plus a per-split record
+  stream for straggler analysis (``ft/stragglers.py``).
+
+``mesh=`` composes with streaming: each split (or the accumulated stream)
+reduces through the psum-sharded tier path, and the cross-split combine
+operates on the replicated partial.
+
+    src = MemmapCatalogSplits("catalog.f32", d=3, rows_per_split=1 << 20)
+    res = run_job_streaming(neighbor_search_job(0.02, codec="int16"), src)
+    res.stats.overlap_fraction, res.stats.n_splits
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import Prefetcher, SplitSource  # noqa: F401
+from repro.mapreduce.codecs import get_codec
+from repro.mapreduce.instrumentation import StageStats
+from repro.mapreduce.job import (JobResult, concat_mapped,
+                                 host_shuffle_reduce, map_split_device,
+                                 shuffle_reduce_device, validate_batch)
+
+
+# ---------------------------------------------------------------------------
+# Combiner: the pluggable map-side combine stage
+# ---------------------------------------------------------------------------
+
+class Combiner:
+    """Hadoop's map-side combine as a pluggable stage.
+
+    ``precombine`` runs on the raw split BEFORE map/shuffle (inside the
+    prefetch thread, so it overlaps compute) and may rewrite the split into
+    an equivalent, smaller item stream — that is where shuffle bytes
+    actually shrink. ``combine`` merges per-split reduce partials on device;
+    the base implementation is the commutative-monoid tree-sum, correct for
+    any reducer whose totals add (all the stock reducers' accumulators are
+    sums already — that is how partitions combine).
+
+    A combiner is only VALID when reduce(split A + split B) equals
+    combine(reduce(A), reduce(B)) — true for per-row folds like token
+    counting, false for cross-row kernels like pair counting. The executor
+    therefore derives defaults from ``Reducer.combiner()`` (None = no
+    combine, accumulate the shuffle instead) rather than guessing.
+    """
+
+    name = "sum"
+
+    def precombine(self, items: np.ndarray) -> np.ndarray:
+        """Rewrite one raw split into an equivalent item stream (host side,
+        runs in the prefetch thread). Default: unchanged."""
+        return items
+
+    def combine(self, acc, partials):
+        """Merge a new tuple of per-job reduce partials into the running
+        accumulator (device pytrees; ``acc`` is None on the first split)."""
+        if acc is None:
+            return partials
+        return jax.tree.map(jnp.add, acc, partials)
+
+
+@dataclasses.dataclass
+class StreamSummary:
+    """Aggregate post-shuffle state of a combine-mode streaming run — what
+    ``Reducer.finalize`` sees instead of a materialized ``ShuffledData``.
+    ``n_owned``/``n_bucket`` are per-partition counts SUMMED over splits, so
+    count-based corrections (self-pair removal etc.) work unchanged."""
+
+    n_owned: np.ndarray        # [P] int64
+    n_bucket: np.ndarray       # [P] int64
+    pair_cells: float = 0.0
+    owned_cells: float = 0.0
+    real_pair_cells: float = 0.0
+
+    @property
+    def padded_ratio(self) -> float:
+        return (self.pair_cells / self.real_pair_cells
+                if self.real_pair_cells else 1.0)
+
+
+class _Agg:
+    """Running padded/real cell + partition-count aggregation over splits."""
+
+    def __init__(self):
+        self.pair_pad = 0.0
+        self.pair_real = 0.0
+        self.owned_cells = 0.0
+        self.shard_pad = None
+        self.shard_real = None
+        self.n_owned = None
+        self.n_bucket = None
+
+    def add(self, sd, shard_pad, shard_real):
+        self.pair_pad += sd.pair_cells
+        self.pair_real += sd.real_pair_cells
+        self.owned_cells += sd.owned_cells
+        no = np.asarray(sd.n_owned, np.int64)
+        nb = np.asarray(sd.n_bucket, np.int64)
+        if self.shard_pad is None:
+            self.shard_pad = np.asarray(shard_pad, np.float64).copy()
+            self.shard_real = np.asarray(shard_real, np.float64).copy()
+            self.n_owned, self.n_bucket = no.copy(), nb.copy()
+        else:
+            self.shard_pad += shard_pad
+            self.shard_real += shard_real
+            self.n_owned += no
+            self.n_bucket += nb
+
+    def finish(self, stats: StageStats):
+        stats.reduce_padded_ratio = (self.pair_pad / self.pair_real
+                                     if self.pair_real else 1.0)
+        if self.shard_pad is not None:
+            stats.shard_padded_ratio = tuple(
+                float(p / max(r, 1.0))
+                for p, r in zip(self.shard_pad, self.shard_real))
+
+    def summary(self) -> StreamSummary:
+        return StreamSummary(self.n_owned, self.n_bucket,
+                             pair_cells=self.pair_pad,
+                             owned_cells=self.owned_cells,
+                             real_pair_cells=self.pair_real)
+
+
+def _resolve_combiner(combiner, jobs, codec):
+    """None / "auto" / a ``Combiner`` instance -> the combiner to run (or
+    None). "auto" derives from the reducers, and only engages when EVERY
+    batched job provides one, they agree, and the codec is exact — a lossy
+    codec quantizes the combiner's pre-aggregated counts into a different
+    wire domain than the raw items, which would break streaming==monolithic
+    parity silently. Pass an instance to force."""
+    if combiner is None:
+        return None
+    if isinstance(combiner, Combiner):
+        return combiner
+    if combiner != "auto":
+        raise ValueError(f"combiner must be None, 'auto', or a Combiner "
+                         f"instance, got {combiner!r}")
+    if not codec.exact:
+        return None
+    combs = [j.reducer.combiner() for j in jobs]
+    if any(c is None for c in combs):
+        return None
+    if any(c != combs[0] for c in combs[1:]):
+        return None
+    return combs[0]
+
+
+# ---------------------------------------------------------------------------
+# The streaming executor
+# ---------------------------------------------------------------------------
+
+def run_jobs_streaming(jobs, source: SplitSource, *, mesh=None,
+                       engine: str = "auto", combiner="auto",
+                       prefetch: int = 2,
+                       straggler_monitor=None) -> list[JobResult]:
+    """Stream every split of ``source`` through map -> combine -> shuffle ->
+    reduce and return one ``JobResult`` per job (all sharing one
+    ``StageStats`` with per-split records).
+
+    - ``combiner="auto"`` derives the map-side combine from the reducers
+      (see ``_resolve_combiner``); ``None`` disables it (splits accumulate
+      as wire-dtype streams, one global reduce at the end); a ``Combiner``
+      instance forces it.
+    - ``prefetch`` is the double-buffer depth: >0 fetches + device-transfers
+      split k+1 on a background thread while split k computes
+      (``overlap_hidden_s`` records what that hid); 0 runs synchronously
+      (what ``run_jobs`` uses for its one-split delegate).
+    - ``straggler_monitor`` (``ft.StragglerMonitor``) receives
+      ``record(split_index, split_wall_s)`` per split, so slow splits can
+      drive Hadoop-style speculative re-execution policy
+      (``ft.SpeculativePolicy``).
+    - ``mesh`` composes: per-split (or final) reduces run psum-sharded over
+      the ``data`` axis; cross-split combine sees the replicated partial.
+
+    The partition space must be split-independent (``n_partitions`` is read
+    from the first split) — true for the stock zone/hash partitioners.
+    """
+    if not jobs:
+        return []
+    validate_batch(jobs)
+    if engine == "auto":
+        engine = "device"
+    if engine not in ("device", "host"):
+        raise ValueError(f"unknown engine {engine!r}; "
+                         "expected 'auto', 'device', or 'host'")
+    j0 = jobs[0]
+    codec = get_codec(j0.codec)
+    part = j0.partitioner
+    comb = _resolve_combiner(combiner, jobs, codec)
+    K = int(source.n_splits())
+    device = engine == "device"
+    stats = StageStats(job="+".join(j.name for j in jobs), engine=engine,
+                       codec=codec.name, n_splits=K,
+                       combiner=comb.name if comb else "")
+
+    def fetch(k):
+        # -> (items, raw_rows, raw_bytes): the RAW split size is carried
+        # alongside so n_items/map_bytes report what was actually fetched,
+        # not the combiner's pre-aggregated rewrite
+        s = source.split(k)
+        raw_rows, raw_bytes = len(s), int(np.asarray(s).nbytes)
+        if comb is not None:
+            s = comb.precombine(s)
+        return s, raw_rows, raw_bytes
+
+    def fetch_to_device(k):
+        # runs on the prefetch thread: host I/O, precombine, AND the
+        # host->device transfer all overlap the main thread's compute
+        s, raw_rows, raw_bytes = fetch(k)
+        return (jax.device_put(np.ascontiguousarray(
+            np.asarray(s, np.float32))), raw_rows, raw_bytes)
+
+    def synchronous():
+        for k in range(K):
+            t0 = time.perf_counter()
+            item = fetch(k)
+            dt = time.perf_counter() - t0
+            yield k, item, dt, dt
+
+    acc = None
+    mapped = []
+    host_items = []
+    recs = []
+    agg = _Agg()
+    raw_items_total = 0
+    raw_bytes_total = 0
+    P = None
+
+    def consume(k, item, wait_s, prep_s):
+        nonlocal acc, P, raw_items_total, raw_bytes_total
+        items_k, raw_rows, raw_bytes = item
+        raw_items_total += raw_rows
+        raw_bytes_total += raw_bytes
+        stats.fetch_wall_s += wait_s
+        stats.overlap_hidden_s += max(prep_s - wait_s, 0.0)
+        if P is None:
+            P = int(part.n_partitions(items_k))
+        rec = {"split": k, "n_items": raw_rows, "fetch_wait_s": wait_s,
+               "fetch_prep_s": prep_s}
+        m0, s0, r0 = stats.map_wall_s, stats.shuffle_wall_s, stats.reduce_wall_s
+        if device:
+            t0 = time.perf_counter()
+            m = map_split_device(part, codec, items_k, P)
+            stats.map_wall_s += time.perf_counter() - t0
+            if comb is None:
+                mapped.append(m)
+            else:
+                totals, sd, sp, sr = shuffle_reduce_device(jobs, m, P, stats,
+                                                           mesh)
+                agg.add(sd, sp, sr)
+                t0 = time.perf_counter()
+                acc = comb.combine(acc, totals)
+                stats.combine_wall_s += time.perf_counter() - t0
+        else:
+            items_h = np.asarray(items_k)
+            if comb is None:
+                host_items.append(items_h)
+            else:
+                totals, sd, sp, sr = host_shuffle_reduce(jobs, items_h,
+                                                         stats, mesh)
+                agg.add(sd, sp, sr)
+                t0 = time.perf_counter()
+                acc = comb.combine(acc, totals)
+                stats.combine_wall_s += time.perf_counter() - t0
+        rec["map_s"] = stats.map_wall_s - m0
+        rec["shuffle_s"] = stats.shuffle_wall_s - s0
+        rec["reduce_s"] = stats.reduce_wall_s - r0
+        # the split's own end-to-end cost: its fetch/transfer work (prep, as
+        # measured in the producer whether or not it was hidden) plus its
+        # processing walls. In accumulate mode processing is deferred to the
+        # one global reduce, so per-split cost is I/O-dominated — exactly
+        # the signal Hadoop's speculative execution watches (a split whose
+        # read stalls shows up here even when other splits hid theirs).
+        rec["wall_s"] = (prep_s + rec["map_s"] + rec["shuffle_s"]
+                         + rec["reduce_s"])
+        recs.append(rec)
+        if straggler_monitor is not None:
+            straggler_monitor.record(k, rec["wall_s"])
+
+    if K > 1 and prefetch > 0:
+        produce = fetch_to_device if device else fetch
+        with Prefetcher(produce, depth=prefetch, n=K) as pf:
+            while (got := pf.get()) is not None:
+                consume(*got)
+    else:
+        for got in synchronous():
+            consume(*got)
+    assert len(recs) == K, (len(recs), K)
+
+    if comb is None:
+        # no valid map-side combine: the accumulated wire-format streams
+        # cross ONE global shuffle+reduce (Hadoop's reduce-after-last-map)
+        if device:
+            totals, sd, sp, sr = shuffle_reduce_device(
+                jobs, concat_mapped(mapped), P, stats, mesh)
+        else:
+            items_all = (host_items[0] if len(host_items) == 1
+                         else np.concatenate(host_items, axis=0))
+            totals, sd, sp, sr = host_shuffle_reduce(jobs, items_all, stats,
+                                                     mesh)
+        agg.add(sd, sp, sr)
+        summary = sd
+    else:
+        t0 = time.perf_counter()
+        totals = jax.block_until_ready(acc)
+        stats.combine_wall_s += time.perf_counter() - t0
+        summary = agg.summary()
+    agg.finish(stats)
+    # n_items/map_bytes always mean the RAW catalog (what the maps read) —
+    # the per-split stages counted post-precombine rows when a combiner ran
+    stats.n_items = raw_items_total
+    stats.map_bytes = raw_bytes_total
+    stats.splits = tuple(recs)
+    return [JobResult(j.reducer.finalize(t, summary), stats)
+            for j, t in zip(jobs, totals)]
+
+
+def run_job_streaming(job, source: SplitSource, *, mesh=None,
+                      engine: str = "auto", combiner="auto",
+                      prefetch: int = 2, straggler_monitor=None) -> JobResult:
+    """Stream one job over a ``SplitSource``. -> JobResult(output, stats)."""
+    return run_jobs_streaming([job], source, mesh=mesh, engine=engine,
+                              combiner=combiner, prefetch=prefetch,
+                              straggler_monitor=straggler_monitor)[0]

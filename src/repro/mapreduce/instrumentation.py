@@ -11,6 +11,14 @@ Stage -> resource mapping:
 - map + reduce bytes  -> the memory term (HBM analogue of the paper's disk),
 - shuffle wire bytes  -> the collective term (the paper's network),
 - reduce FLOPs        -> the compute term.
+
+Streaming runs (``mapreduce/executor.py``) add a fourth boundary: splits are
+fetched and transferred while earlier splits compute, so split I/O divides
+into *exposed* time (``fetch_wall_s``, the executor actually blocked — part
+of ``wall_s``) and *hidden* time (``overlap_hidden_s``, prefetch work that
+ran under compute and cost nothing) — the Amdahl tables can then separate
+what streaming hides from what it merely relabels. ``splits`` keeps one
+record per split for straggler analysis.
 """
 from __future__ import annotations
 
@@ -47,10 +55,26 @@ class StageStats:
     # pure phantom padding shows its full padded cell count — load imbalance
     # and phantom waste in one vector; empty () off the MapReduce engines)
     shard_padded_ratio: tuple = ()
+    # streaming (split) execution: one record per split plus the
+    # exposed-vs-hidden split I/O decomposition
+    n_splits: int = 1
+    combiner: str = ""                 # active map-side combiner ("" = none)
+    fetch_wall_s: float = 0.0          # split fetch/transfer the run WAITED on
+    combine_wall_s: float = 0.0        # cross-split combine of partials
+    overlap_hidden_s: float = 0.0      # prefetch work hidden under compute
+    splits: tuple = ()                 # per-split record dicts (see executor)
 
     @property
     def wall_s(self) -> float:
-        return self.map_wall_s + self.shuffle_wall_s + self.reduce_wall_s
+        return (self.map_wall_s + self.shuffle_wall_s + self.reduce_wall_s
+                + self.fetch_wall_s + self.combine_wall_s)
+
+    @property
+    def overlap_fraction(self) -> float:
+        """Fraction of total split-I/O time hidden under compute (1.0 =
+        perfectly overlapped, 0.0 = fully exposed or not streaming)."""
+        total = self.overlap_hidden_s + self.fetch_wall_s
+        return self.overlap_hidden_s / total if total > 0 else 0.0
 
     @property
     def compression_ratio(self) -> float:
@@ -63,7 +87,8 @@ class StageStats:
     def dominant_stage(self) -> str:
         """Which stage dominated wall time (the paper's per-task breakdown)."""
         times = {"map": self.map_wall_s, "shuffle": self.shuffle_wall_s,
-                 "reduce": self.reduce_wall_s}
+                 "reduce": self.reduce_wall_s, "fetch": self.fetch_wall_s,
+                 "combine": self.combine_wall_s}
         return max(times, key=times.get)
 
     def roofline(self, chips: int = 1) -> RooflineTerms:
@@ -78,6 +103,7 @@ class StageStats:
         d = {f.name: getattr(self, f.name)
              for f in dataclasses.fields(self)}
         d.update(wall_s=self.wall_s, dominant_stage=self.dominant_stage,
-                 compression_ratio=self.compression_ratio)
+                 compression_ratio=self.compression_ratio,
+                 overlap_fraction=self.overlap_fraction)
         d["amdahl"] = self.roofline(chips).to_dict()
         return d

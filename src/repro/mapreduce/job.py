@@ -191,6 +191,17 @@ class Reducer:
         """Estimated reduce-stage FLOPs, for StageStats/Amdahl accounting."""
         return 0.0
 
+    def combiner(self):
+        """Map-side combine plugin (an ``executor.Combiner``) for this
+        reducer, or None when per-split reduce outputs cannot be merged into
+        the whole-catalog answer (any reducer whose kernel couples rows
+        ACROSS items, e.g. pair counting — a pair spanning two splits is
+        seen by neither split alone). Reducers whose output is a
+        commutative-monoid fold over individual owned rows (wordcount's
+        token histogram) return one, and the streaming executor then keeps
+        only the combined accumulator across splits."""
+        return None
+
 
 class _PaddingAccounting:
     """Shared padded-vs-real capacity accounting (both engines' ShuffledData
@@ -630,38 +641,98 @@ def _reduce_tier_sharded(reducers, codec, tier: TierData, mesh):
     return combine(stacked)
 
 
-def _run_jobs_device(jobs, items, stats: StageStats,
-                     mesh=None) -> list[JobResult]:
-    j0 = jobs[0]
-    codec = get_codec(j0.codec)
-    part = j0.partitioner
-    D = _data_axis_size(mesh)
-    items = np.asarray(items)
+@dataclasses.dataclass
+class MappedSplit:
+    """Device-resident output of the map stage for ONE catalog split: the
+    codec wire payload plus the bucket-entry index metadata. This is the
+    unit the streaming executor (``executor.py``) moves between stages —
+    splits are mapped one at a time and either reduced immediately (combine
+    mode) or accumulated via ``concat_mapped`` and reduced once (the raw
+    float32 split can be dropped as soon as its ``MappedSplit`` exists; only
+    wire-dtype arrays persist)."""
+
+    payloads: tuple            # codec wire arrays, leading axis = n_rows
+    keys: jax.Array            # [n] int32 owning partition per row
+    dest_eff: jax.Array        # [m] int32 bucket destinations (invalid -> P)
+    src: jax.Array             # [m] int32 row index into payloads
+    skey: object               # [n] secondary sort key or None
+    n_rows: int = 0
+    d: int = 0
+    nbytes_in: int = 0         # raw input bytes (map_bytes accounting)
+
+
+def map_split_device(partitioner: Partitioner, codec: ShuffleCodec, items,
+                     P: int) -> MappedSplit:
+    """Map stage for one split: partition assignment + border replication as
+    jax ops, payload encoded straight to the codec's wire dtype. Pure
+    dispatch — nothing here blocks, so a caller can map split k while split
+    k-1 still reduces."""
+    if not isinstance(items, jax.Array):
+        items = np.asarray(items)
     if items.ndim == 1:
         items = items[:, None]
-    d = items.shape[1]
-
-    # map: assignment + border replication as jax ops (index metadata —
-    # [m] int32 keys/destinations — is pulled once for counts & tiering)
-    t0 = time.perf_counter()
     items_dev = jnp.asarray(items, jnp.float32)
-    P = int(part.n_partitions(items))
-    keys = part.assign_device(items_dev)
-    dest, src, valid = part.bucket_entries_device(items_dev, keys, P)
+    keys = partitioner.assign_device(items_dev)
+    dest, src, valid = partitioner.bucket_entries_device(items_dev, keys, P)
     dest_eff = jnp.where(valid, dest, P).astype(jnp.int32)
     src = jnp.asarray(src, jnp.int32)
-    keys_h = np.asarray(jax.block_until_ready(keys))
-    dest_h = np.asarray(dest_eff)
-    n_owned = np.bincount(keys_h, minlength=P).astype(np.int64)
-    n_bucket = np.bincount(dest_h, minlength=P + 1)[:P].astype(np.int64)
-    stats.map_wall_s = time.perf_counter() - t0
-    stats.map_bytes = items.nbytes
+    payloads = codec.encode_device(items_dev)
+    skey = partitioner.sort_key_device(items_dev)
+    return MappedSplit(payloads, keys, dest_eff, src, skey,
+                       n_rows=int(items.shape[0]), d=int(items.shape[1]),
+                       nbytes_in=int(items.nbytes))
 
-    # shuffle: encode to wire dtype, tier, argsort-bucket, scatter. Tier
+
+def concat_mapped(splits: "list[MappedSplit]") -> MappedSplit:
+    """Merge per-split map outputs into one stream (device concat; source
+    row indices are offset into the concatenated payload). Entry ORDER
+    differs from a monolithic map over the concatenated catalog — bucket
+    contents are identical as multisets, and partition reductions are
+    commutative sums, so results are bit-identical (asserted in tests)."""
+    if len(splits) == 1:
+        return splits[0]
+    offs = np.cumsum([0] + [s.n_rows for s in splits[:-1]])
+    skeys = [s.skey for s in splits]
+    return MappedSplit(
+        payloads=tuple(jnp.concatenate(ps)
+                       for ps in zip(*(s.payloads for s in splits))),
+        keys=jnp.concatenate([s.keys for s in splits]),
+        dest_eff=jnp.concatenate([s.dest_eff for s in splits]),
+        src=jnp.concatenate([s.src + np.int32(o)
+                             for s, o in zip(splits, offs)]),
+        skey=(None if any(sk is None for sk in skeys)
+              else jnp.concatenate(skeys)),
+        n_rows=int(sum(s.n_rows for s in splits)),
+        d=splits[0].d,
+        nbytes_in=int(sum(s.nbytes_in for s in splits)))
+
+
+def shuffle_reduce_device(jobs, m: MappedSplit, P: int, stats: StageStats,
+                          mesh=None):
+    """Shuffle + reduce one mapped stream (a single split, or the
+    ``concat_mapped`` accumulation of many): count, tier, argsort-bucket,
+    scatter in wire dtype, then the tiered masked reduce — sharded over the
+    mesh's ``data`` axis with a psum combine when one is given.
+
+    Wall/byte stats ACCUMULATE (``+=``) so streaming runs can call this per
+    split; ratio-style fields (``reduce_padded_ratio``/``shard_padded_ratio``)
+    are left to the caller, which receives the per-call padded/real cell
+    vectors. -> (per-job totals, DeviceShuffledData, shard_pad, shard_real).
+    """
+    j0 = jobs[0]
+    codec = get_codec(j0.codec)
+    D = _data_axis_size(mesh)
+    d = m.d
+
+    # shuffle: count, tier, argsort-bucket, scatter (wire dtype). Tier
     # partition counts are padded to a multiple of the mesh's data axis
     # size with phantom (zero-count) partitions, so every tier splits
     # evenly across shards.
     t0 = time.perf_counter()
+    keys_h = np.asarray(jax.block_until_ready(m.keys))
+    dest_h = np.asarray(m.dest_eff)
+    n_owned = np.bincount(keys_h, minlength=P).astype(np.int64)
+    n_bucket = np.bincount(dest_h, minlength=P + 1)[:P].astype(np.int64)
     plan = plan_tiers(n_owned, n_bucket, j0.tile, pad_partitions_to=D)
     part_tier = np.full(P + 1, -1, np.int32)
     part_local = np.zeros(P + 1, np.int32)
@@ -674,25 +745,23 @@ def _run_jobs_device(jobs, items, stats: StageStats,
     np.cumsum(n_owned, out=o_starts[1:])
     b_starts = np.zeros(P + 1, np.int32)
     np.cumsum(n_bucket, out=b_starts[1:])
-    payloads = codec.encode_device(items_dev)
-    skey = part.sort_key_device(items_dev)
     stats.shuffle_index_impl = "jnp" if _use_jnp_indices() else "host"
     if _use_jnp_indices():
         scattered = _scatter_tiers_jit(
-            payloads, keys, dest_eff, src,
-            jnp.zeros(0) if skey is None else skey, jnp.asarray(o_starts),
-            jnp.asarray(b_starts), jnp.asarray(part_tier),
-            jnp.asarray(part_local), specs=tuple(specs),
-            has_skey=skey is not None)
+            m.payloads, m.keys, m.dest_eff, m.src,
+            jnp.zeros(0) if m.skey is None else m.skey,
+            jnp.asarray(o_starts), jnp.asarray(b_starts),
+            jnp.asarray(part_tier), jnp.asarray(part_local),
+            specs=tuple(specs), has_skey=m.skey is not None)
     else:
-        src_h = np.asarray(src)
+        src_h = np.asarray(m.src)
         live = dest_h < P           # drop non-replicated border slots before
         if not live.all():          # sorting: fewer copies = less sort work
             dest_h, src_h = dest_h[live], src_h[live]
         scattered = _scatter_tiers_host(
-            payloads, keys_h, dest_h, src_h,
-            None if skey is None else np.asarray(skey), o_starts, b_starts,
-            part_tier, part_local, tuple(specs))
+            m.payloads, keys_h, dest_h, src_h,
+            None if m.skey is None else np.asarray(m.skey), o_starts,
+            b_starts, part_tier, part_local, tuple(specs))
     scattered = jax.block_until_ready(scattered)
     tiers = []
     shard_pad = np.zeros(D, np.float64)
@@ -709,16 +778,14 @@ def _run_jobs_device(jobs, items, stats: StageStats,
         shard_pad += float(Pt // D) * C1 * C2
     sd = DeviceShuffledData(tiers, n_owned, n_bucket)
     n_shuffled = int(n_bucket.sum())
-    stats.shuffle_wall_s = time.perf_counter() - t0
-    stats.shuffle_wire_bytes = n_shuffled * codec.device_bytes_per_item(d)
-    stats.shuffle_raw_bytes = 4 * n_shuffled * d
-    stats.n_items = len(items)
+    stats.shuffle_wall_s += time.perf_counter() - t0
+    stats.shuffle_wire_bytes += n_shuffled * codec.device_bytes_per_item(d)
+    stats.shuffle_raw_bytes += 4 * n_shuffled * d
+    stats.n_items += m.n_rows
     stats.n_partitions = P
     stats.codec = codec.name
     stats.engine = "device"
     stats.n_shards = D
-    stats.shard_padded_ratio = tuple(
-        float(p / max(r, 1.0)) for p, r in zip(shard_pad, shard_real))
 
     # reduce: decode on-device, then one batched masked kernel pass per tier
     # (sharded over the mesh's data axis + psum tier combine when present)
@@ -736,32 +803,55 @@ def _run_jobs_device(jobs, items, stats: StageStats,
         totals = outs if totals is None else tuple(
             jax.tree.map(jnp.add, a, b) for a, b in zip(totals, outs))
     totals = jax.block_until_ready(totals)
-    stats.reduce_wall_s = time.perf_counter() - t0
-    stats.reduce_bytes = sum(t.nbytes for t in tiers)
-    stats.reduce_flops = float(sum(j.reducer.flops(sd) for j in jobs))
-    stats.reduce_padded_ratio = sd.padded_ratio
-    return [JobResult(j.reducer.finalize(t, sd), stats)
-            for j, t in zip(jobs, totals)]
+    stats.reduce_wall_s += time.perf_counter() - t0
+    stats.reduce_bytes += sum(t.nbytes for t in tiers)
+    stats.reduce_flops += float(sum(j.reducer.flops(sd) for j in jobs))
+    return totals, sd, shard_pad, shard_real
+
+
+def host_shuffle_reduce(jobs, items, stats: StageStats, mesh=None):
+    """The host engine's shuffle + reduce for one item stream (numpy shuffle
+    + ``lax.map`` reduce, sharded over the mesh's ``data`` axis when given)
+    — the oracle twin of ``shuffle_reduce_device`` with the same accumulate
+    (``+=``) stats contract and return shape.
+    -> (per-job totals, ShuffledData, shard_pad, shard_real)."""
+    j0 = jobs[0]
+    codec = get_codec(j0.codec)
+    D = _data_axis_size(mesh)
+    local = StageStats()
+    sd = shuffle_stage(items, j0.partitioner, codec, tile=j0.tile,
+                       pad_partitions_to=D,
+                       pad_value=j0.reducer.pad_value, stats=local)
+    stats.map_wall_s += local.map_wall_s
+    stats.map_bytes += local.map_bytes
+    stats.shuffle_wall_s += local.shuffle_wall_s
+    stats.shuffle_wire_bytes += local.shuffle_wire_bytes
+    stats.shuffle_raw_bytes += local.shuffle_raw_bytes
+    stats.n_items += local.n_items
+    stats.n_partitions = local.n_partitions
+    stats.codec = local.codec
+    stats.engine = "host"
+    stats.shuffle_index_impl = local.shuffle_index_impl
+    stats.n_shards = D
+    q = sd.owned.shape[0] // D
+    cells = (sd.n_owned.astype(np.float64)
+             * sd.n_bucket).reshape(D, q).sum(axis=1)
+    pad_cells = float(q) * sd.owned.shape[1] * sd.bucket.shape[1]
+    t0 = time.perf_counter()
+    totals = jax.block_until_ready(
+        reduce_stage([j.reducer for j in jobs], sd, mesh))
+    stats.reduce_wall_s += time.perf_counter() - t0
+    stats.reduce_bytes += sd.owned.nbytes + sd.bucket.nbytes
+    stats.reduce_flops += float(sum(j.reducer.flops(sd) for j in jobs))
+    return totals, sd, np.full(D, pad_cells), np.asarray(cells, np.float64)
 
 
 # ---------------------------------------------------------------------------
-# Entry points
+# Entry points (one-split special case of the streaming executor)
 # ---------------------------------------------------------------------------
 
-def run_jobs(jobs, items, *, mesh=None, engine: str = "auto"
-             ) -> list[JobResult]:
-    """Execute several jobs that share partitioner/codec/tile through ONE
-    map+shuffle and one fused reduce pass (e.g. Neighbor Searching and
-    Neighbor Statistics over the same catalog cost a single data pass).
-
-    ``engine``: ``"device"`` (wire-dtype shuffle + tiered masked batched
-    reduce; under a data-axis ``mesh`` the tiers shard over ``data`` and
-    tier partials combine with a psum), ``"host"`` (numpy shuffle +
-    ``lax.map`` reduce; the oracle-parity path, on or off mesh), or
-    ``"auto"`` (always device — both engines shard over any data-axis
-    mesh). -> one JobResult per job, sharing a single StageStats."""
-    if not jobs:
-        return []
+def validate_batch(jobs) -> None:
+    """Batched jobs must share one shuffle (partitioner/codec/tile/pad)."""
     j0 = jobs[0]
     c0 = get_codec(j0.codec)
     for j in jobs[1:]:
@@ -775,34 +865,30 @@ def run_jobs(jobs, items, *, mesh=None, engine: str = "auto"
             raise ValueError(
                 f"batched jobs must share one shuffle: {j.name!r} differs "
                 f"from {j0.name!r} in {', '.join(diffs)}")
-    if engine == "auto":
-        engine = "device"
-    stats = StageStats(job="+".join(j.name for j in jobs), engine=engine)
-    if engine == "device":
-        return _run_jobs_device(jobs, items, stats, mesh)
-    if engine != "host":
-        raise ValueError(f"unknown engine {engine!r}; "
-                         "expected 'auto', 'device', or 'host'")
-    D = _data_axis_size(mesh)
-    sd = shuffle_stage(items, j0.partitioner, c0, tile=j0.tile,
-                       pad_partitions_to=D,
-                       pad_value=j0.reducer.pad_value, stats=stats)
-    stats.n_shards = D
-    q = sd.owned.shape[0] // D
-    cells = (sd.n_owned.astype(np.float64)
-             * sd.n_bucket).reshape(D, q).sum(axis=1)
-    pad_cells = float(q) * sd.owned.shape[1] * sd.bucket.shape[1]
-    stats.shard_padded_ratio = tuple(
-        float(pad_cells / max(c, 1.0)) for c in cells)
-    t0 = time.perf_counter()
-    totals = jax.block_until_ready(
-        reduce_stage([j.reducer for j in jobs], sd, mesh))
-    stats.reduce_wall_s = time.perf_counter() - t0
-    stats.reduce_bytes = sd.owned.nbytes + sd.bucket.nbytes
-    stats.reduce_flops = float(sum(j.reducer.flops(sd) for j in jobs))
-    stats.reduce_padded_ratio = sd.padded_ratio
-    return [JobResult(j.reducer.finalize(t, sd), stats)
-            for j, t in zip(jobs, totals)]
+
+
+def run_jobs(jobs, items, *, mesh=None, engine: str = "auto"
+             ) -> list[JobResult]:
+    """Execute several jobs that share partitioner/codec/tile through ONE
+    map+shuffle and one fused reduce pass (e.g. Neighbor Searching and
+    Neighbor Statistics over the same catalog cost a single data pass).
+
+    This is the ONE-SPLIT special case of the streaming executor
+    (``mapreduce/executor.py``): the whole catalog is a single
+    ``ArraySplits`` split, no combiner, no prefetch — the identical
+    map/shuffle/reduce code path the executor runs per split, so streaming
+    over N splits is bit-identical to this for exact codecs.
+
+    ``engine``: ``"device"`` (wire-dtype shuffle + tiered masked batched
+    reduce; under a data-axis ``mesh`` the tiers shard over ``data`` and
+    tier partials combine with a psum), ``"host"`` (numpy shuffle +
+    ``lax.map`` reduce; the oracle-parity path, on or off mesh), or
+    ``"auto"`` (always device — both engines shard over any data-axis
+    mesh). -> one JobResult per job, sharing a single StageStats."""
+    from repro.data.pipeline import ArraySplits
+    from repro.mapreduce.executor import run_jobs_streaming
+    return run_jobs_streaming(jobs, ArraySplits(items), mesh=mesh,
+                              engine=engine, combiner=None, prefetch=0)
 
 
 def run_job(job: MapReduceJob, items, *, mesh=None, engine: str = "auto"

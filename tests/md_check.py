@@ -277,6 +277,57 @@ def check_mapreduce_ragged_shards():
     print("mapreduce ragged shards == host mesh oracle OK")
 
 
+def check_mapreduce_streaming_sharded():
+    """Split-streaming executor on an 8-device data mesh: streaming over
+    2 and 5 splits (and n-splits-of-1 for a small catalog) is bit-identical
+    to the monolithic mesh run for the batched paper apps (identity and
+    int16 codecs — no combiner exists for pair kernels, so the accumulated
+    wire streams cross one sharded reduce) and for wordcount with the
+    map-side combiner on, off, and auto (per-split psum-sharded reduce,
+    cross-split combine on the replicated partial)."""
+    from repro.core.compat import make_mesh as mk
+    from repro.data import ArraySplits, sky
+    from repro.mapreduce import (ZonePartitioner, neighbor_search_job,
+                                 neighbor_statistics_job, run_job_streaming,
+                                 run_jobs, run_jobs_streaming,
+                                 token_histogram_job)
+
+    mesh = mk((8,), ("data",))
+    radius = 0.09
+    edges = np.linspace(0.03, radius, 4)
+    for codec in ("identity", "int16"):
+        part = ZonePartitioner(radius)
+        jobs = [neighbor_search_job(radius, partitioner=part, codec=codec,
+                                    tile=64),
+                neighbor_statistics_job(edges / sky.ARCSEC, partitioner=part,
+                                        codec=codec, tile=64)]
+        xyz = sky.make_catalog(900, 5)
+        mono = run_jobs(jobs, xyz, mesh=mesh)
+        for n_splits in (2, 5):
+            srun = run_jobs_streaming(jobs, ArraySplits(xyz, n_splits),
+                                      mesh=mesh)
+            assert srun[0].stats.n_splits == n_splits
+            assert srun[0].output == mono[0].output, (codec, n_splits)
+            np.testing.assert_array_equal(srun[1].output, mono[1].output)
+        small = xyz[:40]
+        mono_s = run_jobs(jobs, small, mesh=mesh)
+        ones = run_jobs_streaming(jobs, ArraySplits(small, 40), mesh=mesh)
+        assert ones[0].output == mono_s[0].output, codec
+        np.testing.assert_array_equal(ones[1].output, mono_s[1].output)
+
+    toks = np.random.default_rng(2).integers(0, 300, 6000)
+    items = toks.astype(np.float32).reshape(-1, 1)
+    job = token_histogram_job(300, n_partitions=16, tile=64)
+    want = np.bincount(toks, minlength=300)
+    for combiner in (None, "auto", job.reducer.combiner()):
+        res = run_job_streaming(job, ArraySplits(items, 4), mesh=mesh,
+                                combiner=combiner)
+        np.testing.assert_array_equal(res.output, want)
+        if combiner is not None:
+            assert res.stats.combiner == "token_count"
+    print("mapreduce streaming == monolithic on 8-shard mesh OK")
+
+
 def check_mapreduce_sharded():
     """Job engine: sharded-mesh results == mesh=None results, for both paper
     apps (batched over one shuffle) and the wordcount job."""
@@ -316,5 +367,6 @@ if __name__ == "__main__":
         "mapreduce": check_mapreduce_sharded,
         "mapreduce-device": check_mapreduce_device_sharded,
         "mapreduce-ragged": check_mapreduce_ragged_shards,
+        "mapreduce-streaming": check_mapreduce_streaming_sharded,
     }
     checks[sys.argv[1]]()

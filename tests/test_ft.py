@@ -1,6 +1,7 @@
-"""Fault-tolerance policy units: stragglers + coordinator."""
-from repro.ft import Coordinator, CoordinatorConfig, State, StragglerConfig, \
-    StragglerMonitor
+"""Fault-tolerance policy units: stragglers, speculative execution,
+coordinator."""
+from repro.ft import Coordinator, CoordinatorConfig, SpeculativeConfig, \
+    SpeculativePolicy, State, StragglerConfig, StragglerMonitor
 
 
 def test_no_straggler_on_uniform_times():
@@ -34,6 +35,56 @@ def test_rebalance_shifts_quota():
     p = mon.propose()
     assert p["action"] == "rebalance"
     assert p["quota"][1] < 1.0 and p["quota"][0] > 1.0
+
+
+def test_speculative_redispatches_slowest_split():
+    """Hadoop's speculative execution: after enough splits complete, a
+    running split well past the median completed wall is re-dispatched —
+    the SLOWEST one first — and each split is cloned at most max_clones."""
+    pol = SpeculativePolicy(SpeculativeConfig(slowdown=1.5, min_finished=3))
+    for k in range(3):
+        pol.finished(k, 1.0)
+    assert pol.propose()["action"] == "none"    # nothing running
+    pol.running(7, 1.2)                         # within 1.5x median: fine
+    assert pol.propose()["action"] == "none"
+    pol.running(8, 4.0)
+    pol.running(9, 2.0)
+    p = pol.propose()
+    assert p == {"action": "speculate", "split": 8, "elapsed_s": 4.0,
+                 "expected_s": 1.0}
+    p2 = pol.propose()                          # 8 already cloned -> next
+    assert p2["action"] == "speculate" and p2["split"] == 9
+    assert pol.propose()["action"] == "none"    # everyone cloned or fast
+    pol.finished(8, 4.3)                        # original finishes anyway
+    pol.running(10, 9.0)
+    assert pol.propose()["split"] == 10
+
+
+def test_speculative_needs_min_finished_and_feeds_like_monitor():
+    pol = SpeculativePolicy(SpeculativeConfig(min_finished=3))
+    pol.running(5, 100.0)
+    pol.record(0, 1.0)                          # executor-hook alias
+    pol.record(1, 1.0)
+    assert pol.propose()["action"] == "none"    # only 2 finished
+    pol.record(2, 1.0)
+    assert pol.propose()["action"] == "speculate"
+
+
+def test_speculative_from_streaming_run():
+    """End to end: per-split walls from a real streaming run feed the
+    policy; a synthetic stuck split is then the re-dispatch candidate."""
+    import numpy as np
+    from repro.data import ArraySplits, sky
+    from repro.mapreduce import neighbor_search_job, run_job_streaming
+    pol = SpeculativePolicy(SpeculativeConfig(min_finished=4))
+    res = run_job_streaming(neighbor_search_job(0.08, tile=64),
+                            ArraySplits(sky.make_catalog(600, 0), 4),
+                            straggler_monitor=pol)
+    assert len(pol.walls) == 4
+    med = float(np.median(pol.walls))
+    pol.running(4, 10_000 * max(med, 1e-9))
+    p = pol.propose()
+    assert p["action"] == "speculate" and p["split"] == 4
 
 
 def test_coordinator_degrade_then_remesh():

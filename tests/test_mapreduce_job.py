@@ -309,6 +309,160 @@ def test_device_engine_empty_catalog():
         run_job(hjob, xyz, engine="device").output, [0, 0])
 
 
+# ---------------------------------------------------------------------------
+# Split-streaming executor (the monolithic path is its one-split case)
+# ---------------------------------------------------------------------------
+
+def test_streaming_executor_stats_and_records():
+    """Per-split records, fetch/overlap decomposition, and the aggregate
+    stats contract of a streaming run (accumulate mode: pair job)."""
+    from repro.data import ArraySplits
+    from repro.mapreduce import run_job_streaming
+    xyz = sky.make_catalog(1200, 8)
+    job = neighbor_search_job(0.07, codec="int16", tile=64)
+    mono = run_job(job, xyz)
+    res = run_job_streaming(job, ArraySplits(xyz, 4), prefetch=2)
+    assert res.output == mono.output
+    st = res.stats
+    assert st.n_splits == 4 and len(st.splits) == 4
+    assert st.combiner == ""                    # pair kernels can't combine
+    assert [r["split"] for r in st.splits] == [0, 1, 2, 3]
+    assert sum(r["n_items"] for r in st.splits) == 1200
+    assert st.n_items == 1200
+    # streaming moves the same wire bytes as the monolithic shuffle
+    assert st.shuffle_wire_bytes == mono.stats.shuffle_wire_bytes
+    assert st.fetch_wall_s >= 0 and st.overlap_hidden_s >= 0
+    assert 0.0 <= st.overlap_fraction <= 1.0
+    d = st.to_dict()
+    assert d["n_splits"] == 4 and "overlap_fraction" in d
+
+
+def test_streaming_prefetch_off_matches_on():
+    from repro.data import ArraySplits
+    from repro.mapreduce import run_job_streaming
+    xyz = sky.make_catalog(600, 3)
+    job = neighbor_search_job(0.09, tile=64)
+    a = run_job_streaming(job, ArraySplits(xyz, 3), prefetch=0)
+    b = run_job_streaming(job, ArraySplits(xyz, 3), prefetch=2)
+    assert a.output == b.output == run_job(job, xyz).output
+
+
+def test_streaming_host_engine_matches_device():
+    from repro.data import ArraySplits
+    from repro.mapreduce import run_job_streaming, token_histogram_job
+    xyz = sky.make_catalog(500, 6)
+    job = neighbor_search_job(0.1, tile=64)
+    dev = run_job_streaming(job, ArraySplits(xyz, 3), engine="device")
+    host = run_job_streaming(job, ArraySplits(xyz, 3), engine="host")
+    assert dev.output == host.output
+    assert host.stats.engine == "host"
+    toks = np.random.default_rng(9).integers(0, 50, 2000)
+    items = toks.astype(np.float32).reshape(-1, 1)
+    wjob = token_histogram_job(50, tile=64)
+    for combiner in (None, "auto"):
+        hd = run_job_streaming(wjob, ArraySplits(items, 5), engine="device",
+                               combiner=combiner)
+        hh = run_job_streaming(wjob, ArraySplits(items, 5), engine="host",
+                               combiner=combiner)
+        np.testing.assert_array_equal(hd.output, hh.output)
+        np.testing.assert_array_equal(hd.output,
+                                      np.bincount(toks, minlength=50))
+
+
+def test_streaming_combiner_shrinks_wordcount_wire_bytes():
+    """Map-side combine pre-aggregates each split to (token, count) rows, so
+    for vocab << split size the wire carries ~vocab weighted entries instead
+    of every occurrence — the paper's shrink-bytes-before-the-boundary move
+    (>=2x is the fig4 bench gate; here the duplication factor is ~8x)."""
+    from repro.data import ArraySplits
+    from repro.mapreduce import run_job_streaming, token_histogram_job
+    rng = np.random.default_rng(0)
+    vocab, n = 64, 4096
+    toks = rng.integers(0, vocab, n)
+    items = toks.astype(np.float32).reshape(-1, 1)
+    job = token_histogram_job(vocab, n_partitions=8, tile=64)
+    on = run_job_streaming(job, ArraySplits(items, 4))
+    off = run_job_streaming(job, ArraySplits(items, 4), combiner=None)
+    np.testing.assert_array_equal(on.output, off.output)
+    np.testing.assert_array_equal(on.output,
+                                  np.bincount(toks, minlength=vocab))
+    assert on.stats.combiner == "token_count" and off.stats.combiner == ""
+    assert off.stats.shuffle_wire_bytes >= 2 * on.stats.shuffle_wire_bytes, (
+        on.stats.shuffle_wire_bytes, off.stats.shuffle_wire_bytes)
+    # n_items/map_bytes mean the RAW catalog even though the combiner
+    # rewrote each split to (token, count) rows before the map
+    assert on.stats.n_items == n == off.stats.n_items
+    assert on.stats.map_bytes == items.nbytes
+    assert sum(r["n_items"] for r in on.stats.splits) == n
+
+
+def test_streaming_out_of_core_memmap_source(tmp_path):
+    """A memmap-backed catalog 6x the split size streams split-by-split
+    (nothing ever materializes the whole file) and matches the in-memory
+    monolithic run bit-for-bit."""
+    from repro.data import MemmapCatalogSplits
+    from repro.mapreduce import run_job_streaming
+    xyz = sky.make_catalog(1800, 12)
+    path = str(tmp_path / "catalog.f32")
+    MemmapCatalogSplits.write(path, xyz)
+    src = MemmapCatalogSplits(path, d=3, rows_per_split=300)
+    assert src.n_splits() == 6
+    job = neighbor_search_job(0.06, codec="int16", tile=64)
+    res = run_job_streaming(job, src)
+    assert res.output == run_job(job, xyz).output
+    assert res.stats.n_splits == 6
+    assert max(r["n_items"] for r in res.stats.splits) == 300
+
+
+def test_streaming_feeds_straggler_monitor():
+    from repro.data import ArraySplits
+    from repro.ft import StragglerMonitor
+    from repro.mapreduce import run_job_streaming
+    xyz = sky.make_catalog(400, 1)
+    mon = StragglerMonitor(list(range(4)))
+    run_job_streaming(neighbor_search_job(0.1, tile=64),
+                      ArraySplits(xyz, 4), straggler_monitor=mon)
+    assert sorted(mon.ema) == [0, 1, 2, 3]
+    assert all(t >= 0 for t in mon.ema.values())
+
+
+def test_streaming_rejects_bad_combiner():
+    from repro.data import ArraySplits
+    from repro.mapreduce import run_job_streaming
+    with pytest.raises(ValueError):
+        run_job_streaming(neighbor_search_job(0.1, tile=64),
+                          ArraySplits(sky.make_catalog(50, 0), 2),
+                          combiner="bogus")
+
+
+def test_streaming_auto_combiner_requires_exact_codec():
+    """int16 quantizes the combiner's count column into a different wire
+    domain, so "auto" must NOT derive a combiner for lossy codecs."""
+    from repro.data import ArraySplits
+    from repro.mapreduce import run_job_streaming, token_histogram_job
+    toks = np.random.default_rng(4).integers(0, 100, 3000)
+    items = toks.astype(np.float32).reshape(-1, 1)
+    res = run_job_streaming(token_histogram_job(100, codec="int16", tile=64),
+                            ArraySplits(items, 3))
+    assert res.stats.combiner == ""
+    np.testing.assert_array_equal(res.output,
+                                  np.bincount(toks, minlength=100))
+
+
+@pytest.mark.slow
+def test_streaming_matches_monolithic_on_mesh():
+    """Streaming over 2/5/n-of-1 splits == monolithic on an 8-device data
+    mesh, incl. wordcount with the combiner on/off (subprocess)."""
+    script = os.path.join(os.path.dirname(__file__), "md_check.py")
+    env = dict(os.environ)
+    env.pop("JAX_PLATFORMS", None)
+    r = subprocess.run([sys.executable, script, "mapreduce-streaming"],
+                       capture_output=True, text=True, timeout=900, env=env)
+    assert r.returncode == 0, (
+        f"mapreduce-streaming failed:\n{r.stdout}\n{r.stderr}")
+    assert "OK" in r.stdout
+
+
 def test_codec_exact_flags():
     assert get_codec("identity").exact
     assert not get_codec("int16").exact and not get_codec("int8").exact

@@ -14,7 +14,13 @@ sizes instead of hand-picked examples:
    device set a safe superset, never a subset);
 3. engine parity — ``engine="device"`` output is bit-identical to
    ``engine="host"`` for search, stats, and wordcount with exact codecs,
-   under both shuffle index paths.
+   under both shuffle index paths;
+4. streaming parity — the split-streaming executor over RANDOM split
+   boundaries (including 1 split and n-splits-of-1) is bit-identical to the
+   monolithic run for search/stats/wordcount with exact and int16 codecs,
+   and map-side combine (combiner on vs off) changes nothing for monoid
+   reducers. The same properties re-run on an 8-device mesh in
+   ``md_check.py mapreduce-streaming`` (fixed cases, subprocess).
 """
 import numpy as np
 import pytest
@@ -22,10 +28,12 @@ import pytest
 pytest.importorskip("hypothesis")   # optional dev dependency
 from hypothesis import given, settings, strategies as st
 
-from repro.data import sky
+from repro.data import ArraySplits, sky
 from repro.mapreduce import (ZonePartitioner, available_codecs, get_codec,
                              neighbor_search_job, neighbor_statistics_job,
-                             run_job, token_histogram)
+                             run_job, run_job_streaming, run_jobs,
+                             run_jobs_streaming, token_histogram,
+                             token_histogram_job)
 from repro.mapreduce import job as job_mod
 
 settings.register_profile("ci", deadline=None, max_examples=10,
@@ -163,3 +171,68 @@ def test_wordcount_device_host_parity(n, vocab, n_parts, seed, codec, zipf):
                            codec=codec, engine="host").output
     np.testing.assert_array_equal(dev, host)
     np.testing.assert_array_equal(dev, np.bincount(toks, minlength=vocab))
+
+
+# ---------------------------------------------------------------------------
+# 4. split-streaming executor == monolithic run (random split boundaries)
+# ---------------------------------------------------------------------------
+
+def _boundaries(n, seed, n_cuts):
+    """Random split boundaries in [0, n] — duplicates allowed, so empty
+    splits (and the 1-split / n-splits-of-1 extremes) occur naturally."""
+    if n_cuts >= n:                    # n-splits-of-1
+        return list(range(1, n))
+    rng = np.random.default_rng(seed ^ 0x5EED)
+    return sorted(int(b) for b in rng.integers(0, n + 1, n_cuts))
+
+
+@given(n=st.sampled_from([1, 37, 160, 400]), seed=st.integers(0, 30),
+       radius=st.sampled_from([0.06, 0.12, 0.3]),
+       codec=st.sampled_from(["identity", "int16"]), clump=st.booleans(),
+       n_cuts=st.sampled_from([0, 1, 3, 40]))
+def test_streaming_matches_monolithic_search_stats(n, seed, radius, codec,
+                                                   clump, n_cuts):
+    """Pair jobs have no valid map-side combine, so streaming accumulates
+    wire-dtype splits and reduces once — the result must be BIT-identical
+    to the monolithic run for any split boundaries, exact or int16 codec
+    (bucket contents are equal multisets; reductions are integer sums)."""
+    xyz = _catalog(n, seed, clump)
+    src = ArraySplits(xyz, boundaries=_boundaries(n, seed, n_cuts))
+    edges = np.linspace(radius / 3, radius, 4)
+    part = ZonePartitioner(radius)
+    jobs = [neighbor_search_job(radius, partitioner=part, codec=codec,
+                                tile=64),
+            neighbor_statistics_job(edges / sky.ARCSEC, partitioner=part,
+                                    codec=codec, tile=64)]
+    mono = run_jobs(jobs, xyz)
+    stream = run_jobs_streaming(jobs, src)
+    assert stream[0].stats.n_splits == src.n_splits()
+    assert stream[0].stats.combiner == ""      # pair kernels: no combiner
+    assert stream[0].output == mono[0].output
+    np.testing.assert_array_equal(stream[1].output, mono[1].output)
+
+
+@given(n=st.integers(0, 2000), vocab=st.sampled_from([7, 100, 900]),
+       seed=st.integers(0, 99), codec=st.sampled_from(["identity", "int16"]),
+       n_cuts=st.sampled_from([0, 2, 5, 40]))
+def test_streaming_wordcount_and_combiner_equality(n, vocab, seed, codec,
+                                                   n_cuts):
+    """Wordcount streams bit-identically to the monolithic run, and —
+    being a commutative-monoid reducer — with the map-side combiner forced
+    on OR off (combiner pre-aggregation must change bytes, never counts)."""
+    toks = np.random.default_rng(seed).integers(0, vocab, n)
+    items = toks.astype(np.float32).reshape(-1, 1)
+    src = ArraySplits(items, boundaries=_boundaries(n, seed, n_cuts))
+    job = token_histogram_job(vocab, codec=codec, tile=64)
+    want = run_job(job, items).output
+    no_comb = run_job_streaming(job, src, combiner=None)
+    np.testing.assert_array_equal(no_comb.output, want)
+    auto = run_job_streaming(job, src)         # derives combiner iff exact
+    np.testing.assert_array_equal(auto.output, want)
+    if get_codec(job.codec).exact:
+        assert auto.stats.combiner == "token_count"
+        comb = run_job_streaming(job, src,
+                                 combiner=job.reducer.combiner())
+        np.testing.assert_array_equal(comb.output, want)
+    np.testing.assert_array_equal(
+        want, np.bincount(toks, minlength=vocab))

@@ -50,3 +50,10 @@ def test_mapreduce_device_sharded_multidevice():
     ragged tier counts, single-shard tiers, empty partitions, both shuffle
     index paths, and the traceable in-shard_map reduce."""
     assert "OK" in _run("mapreduce-device")
+
+
+@pytest.mark.slow
+def test_mapreduce_streaming_sharded_multidevice():
+    """Split-streaming executor == monolithic on an 8-device data mesh
+    (2/5/n-of-1 splits, identity+int16, wordcount combiner on/off/auto)."""
+    assert "OK" in _run("mapreduce-streaming")

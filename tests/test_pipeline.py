@@ -1,7 +1,11 @@
-"""Data pipeline determinism + sharding + memmap backend."""
+"""Data pipeline determinism + sharding + memmap backend + split sources."""
 import numpy as np
+import pytest
 
-from repro.data import MemmapTokens, Pipeline, PipelineConfig, SyntheticTokens
+from repro.data import (ArraySplits, MemmapCatalogSplits, MemmapTokens,
+                        Pipeline, PipelineConfig, Prefetcher,
+                        SyntheticCatalogSplits, SyntheticTokens,
+                        TokenBlockSplits)
 
 
 def test_synthetic_deterministic():
@@ -34,15 +38,16 @@ def test_elastic_replay_same_batches():
 
 
 def test_prefetch_iterator():
-    pipe = Pipeline(SyntheticTokens(100, 0),
-                    PipelineConfig(4, 8, prefetch=2)).start()
-    it = iter(pipe)
-    s0, b0 = next(it)
-    s1, b1 = next(it)
-    pipe.stop()
-    assert s0 == 0 and s1 == 1
-    assert b0.shape == (4, 8) and not np.array_equal(b0, b1)
-    assert np.array_equal(b0, pipe.batch_at(0))
+    """Context manager: the prefetch thread can never leak past the block."""
+    with Pipeline(SyntheticTokens(100, 0),
+                  PipelineConfig(4, 8, prefetch=2)) as pipe:
+        it = iter(pipe)
+        s0, b0 = next(it)
+        s1, b1 = next(it)
+        assert s0 == 0 and s1 == 1
+        assert b0.shape == (4, 8) and not np.array_equal(b0, b1)
+        assert np.array_equal(b0, pipe.batch_at(0))
+    assert pipe._pf is None                     # stopped on exit
 
 
 def test_memmap_roundtrip(tmp_path):
@@ -53,3 +58,92 @@ def test_memmap_roundtrip(tmp_path):
     assert np.array_equal(src.block(1, 2, 32), data[1:3])
     # wraps around
     assert np.array_equal(src.block(3, 2, 32)[1], data[0])
+
+
+def test_memmap_block_matches_per_row_oracle(tmp_path):
+    """The sliced (vectorized) block read == the old per-row copy loop for
+    any (row0, rows), including multi-wrap reads longer than the file."""
+    path = str(tmp_path / "tok.bin")
+    data = np.random.default_rng(0).integers(0, 999, (5, 16)).astype(np.int32)
+    MemmapTokens.write(path, data)
+    src = MemmapTokens(path, seq_len=16)
+    for row0, rows in [(0, 5), (3, 4), (4, 1), (2, 13), (7, 11), (0, 0)]:
+        idx = np.arange(row0, row0 + rows) % src.n_rows
+        want = np.stack([data[r] for r in idx], axis=0) if rows else \
+            np.zeros((0, 16), np.int32)
+        assert np.array_equal(src.block(row0, rows, 16), want), (row0, rows)
+
+
+def test_prefetcher_finite_and_reports_timing():
+    seen = []
+    with Prefetcher(lambda k: k * k, depth=2, n=4) as pf:
+        while (rec := pf.get()) is not None:
+            k, item, wait_s, prep_s = rec
+            assert item == k * k and wait_s >= 0 and prep_s >= 0
+            seen.append(k)
+    assert seen == [0, 1, 2, 3]
+
+
+def test_prefetcher_propagates_worker_errors():
+    def boom(k):
+        if k == 1:
+            raise RuntimeError("split fetch failed")
+        return k
+    with Prefetcher(boom, n=3) as pf:
+        assert pf.get()[1] == 0
+        with pytest.raises(RuntimeError, match="split fetch failed"):
+            while pf.get() is not None:
+                pass
+
+
+def test_array_splits_boundaries_and_materialize():
+    x = np.arange(20, dtype=np.float32).reshape(10, 2)
+    one = ArraySplits(x)
+    assert one.n_splits() == 1 and np.array_equal(one.split(0), x)
+    cut = ArraySplits(x, boundaries=[0, 3, 3, 10])   # 0/n endpoints + dup 3
+    assert cut.n_splits() == 5                       # -> empty edge/middle
+    assert [len(cut.split(k)) for k in range(5)] == [0, 3, 0, 7, 0]
+    assert np.array_equal(cut.materialize(), x)
+    even = ArraySplits(x, n_splits=3)
+    assert even.n_splits() == 3
+    assert np.array_equal(even.materialize(), x)
+    ones = ArraySplits(x, n_splits=100)              # clamps to n rows
+    assert ones.n_splits() == 10
+
+
+def test_memmap_catalog_splits(tmp_path):
+    rows = np.random.default_rng(1).normal(size=(17, 3)).astype(np.float32)
+    path = str(tmp_path / "cat.f32")
+    MemmapCatalogSplits.write(path, rows)
+    src = MemmapCatalogSplits(path, d=3, rows_per_split=5)
+    assert src.n_splits() == 4
+    assert [len(src.split(k)) for k in range(4)] == [5, 5, 5, 2]
+    assert np.array_equal(src.materialize(), rows)
+    # empty catalog file (mmap rejects empty files): one empty split
+    empty = str(tmp_path / "empty.f32")
+    MemmapCatalogSplits.write(empty, np.zeros((0, 3), np.float32))
+    esrc = MemmapCatalogSplits(empty, d=3, rows_per_split=5)
+    assert esrc.n_splits() == 1 and esrc.split(0).shape == (0, 3)
+
+
+def test_synthetic_catalog_splits_deterministic():
+    a = SyntheticCatalogSplits(1000, 256, seed=3)
+    b = SyntheticCatalogSplits(1000, 256, seed=3)
+    assert a.n_splits() == 4
+    assert [len(a.split(k)) for k in range(4)] == [256, 256, 256, 232]
+    for k in range(4):
+        assert np.array_equal(a.split(k), b.split(k))
+    assert not np.array_equal(a.split(0), a.split(1))
+    # unit vectors
+    np.testing.assert_allclose(np.linalg.norm(a.split(0), axis=1), 1.0,
+                               rtol=1e-5)
+
+
+def test_token_block_splits_match_source():
+    src = SyntheticTokens(500, seed=2)
+    ts = TokenBlockSplits(src, seq_len=16, rows_per_split=4, n_splits=3)
+    assert ts.n_splits() == 3
+    for k in range(3):
+        want = src.block(k * 4, 4, 16).reshape(-1, 1).astype(np.float32)
+        assert np.array_equal(ts.split(k), want)
+        assert ts.split(k).shape == (64, 1)
