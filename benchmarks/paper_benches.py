@@ -300,6 +300,100 @@ def fig4_streaming():
     return rows
 
 
+def fig5_service():
+    """MapReduce-as-a-service (the workload-consolidation argument): a
+    resident sharded catalog answers a stream of small neighbor-search /
+    statistics queries through the submit queue + admission window. Rows:
+    the sequential run_job-per-query baseline (every query pays its own
+    map+shuffle+reduce), the closed-loop batched service (gated >= 3x that
+    baseline), and paced offered loads with p50/p99 latency — all steady
+    state (warmup pass first, the ``_t`` convention)."""
+    from repro.data import sky
+    from repro.mapreduce import (ZonePartitioner, latency_summary,
+                                 neighbor_search_job,
+                                 neighbor_statistics_job, run_job)
+    from repro.serving.mr_service import MRQueryService
+
+    xyz = sky.make_catalog(20000, 0)
+    R = 0.02
+    part = ZonePartitioner(R)
+    edges = np.linspace(R / 4, R, 4)
+    distinct = [neighbor_search_job(r, partitioner=part, codec="int16",
+                                    tile=256) for r in (R, R / 2, R / 4)]
+    distinct.append(neighbor_statistics_job(edges / sky.ARCSEC,
+                                            partitioner=part, codec="int16",
+                                            tile=256))
+    n_req = 32
+    mix = [distinct[i % len(distinct)] for i in range(n_req)]
+
+    # sequential baseline: one full map+shuffle+reduce per query
+    for j in distinct:
+        run_job(j, xyz)                        # warmup (compile caches)
+    t0 = time.perf_counter()
+    seq_out = [run_job(j, xyz).output for j in mix]
+    seq_s = time.perf_counter() - t0
+    rows = [("fig5_service_sequential", seq_s / n_req * 1e6,
+             f"nreq={n_req}_ndistinct={len(distinct)}"
+             f"_qps={n_req / seq_s:.1f}")]
+
+    svc = MRQueryService(max_batch=16, max_wait_s=0.002)
+    t0 = time.perf_counter()
+    svc.load_catalog("sky", xyz, part, codec="int16", tile=256)
+    load_s = time.perf_counter() - t0
+
+    def burst():
+        reqs = [svc.submit(j, catalog="sky") for j in mix]
+        svc.run_pending()
+        return [r.output for r in reqs]
+
+    outs = burst()                             # warmup
+    for got, want in zip(outs, seq_out):       # service == per-query runs
+        np.testing.assert_array_equal(got, want)
+    svc.request_stats.clear()
+    svc.batches.clear()
+    t0 = time.perf_counter()
+    burst()
+    svc_s = time.perf_counter() - t0
+    s = latency_summary(svc.request_stats)
+    speedup = seq_s / svc_s
+    rows.append(("fig5_service_batched", svc_s / n_req * 1e6,
+                 f"qps={n_req / svc_s:.0f}_speedup={speedup:.1f}x"
+                 f"_p50ms={s['p50_ms']:.1f}_p99ms={s['p99_ms']:.1f}"
+                 f"_meanbatch={s['mean_batch']:.1f}"
+                 f"_shuffleonce_s={load_s:.2f}"))
+    assert speedup >= 3.0, \
+        f"batched service below 3x-vs-sequential gate: {speedup:.2f}x"
+
+    # offered-load sweep: pace arrivals at fractions of burst capacity
+    # through the background admission thread; latency vs throughput
+    cap_qps = n_req / svc_s
+    svc.start()
+    for label, frac in (("0.5x", 0.5), ("1x", 1.0), ("2x", 2.0)):
+        svc.request_stats.clear()
+        offered = cap_qps * frac
+        gap = 1.0 / offered
+        t0 = time.perf_counter()
+        reqs = []
+        for i, j in enumerate(mix):
+            target = t0 + i * gap
+            now = time.perf_counter()
+            if target > now:
+                time.sleep(target - now)
+            reqs.append(svc.submit(j, catalog="sky"))
+        for r in reqs:
+            r.result(timeout=300)
+        wall = time.perf_counter() - t0
+        s = latency_summary(svc.request_stats)
+        rows.append((f"fig5_service_load{label}", wall / n_req * 1e6,
+                     f"offered_qps={offered:.0f}"
+                     f"_achieved_qps={s['qps']:.0f}"
+                     f"_p50ms={s['p50_ms']:.1f}_p99ms={s['p99_ms']:.1f}"
+                     f"_waitp99ms={s['wait_p99_ms']:.1f}"
+                     f"_meanbatch={s['mean_batch']:.1f}"))
+    svc.close()
+    return rows
+
+
 def table3_apps():
     """App runtimes vs radius (the paper's theta sweep) through the Job API,
     with the per-job Amdahl numbers the paper's Table 4 derives per task —
@@ -431,4 +525,4 @@ def table4_amdahl():
 
 
 ALL = [fig1_direct_io, table2_network, fig2_pipeline, fig3_improvements,
-       fig4_streaming, table3_apps, table4_amdahl]
+       fig4_streaming, fig5_service, table3_apps, table4_amdahl]

@@ -28,13 +28,16 @@ from repro.mapreduce.codecs import (EncodedShuffle, IdentityCodec,
                                     Int8BlockCodec, Int16Codec, ShuffleCodec,
                                     available_codecs, get_codec,
                                     register_codec)
-from repro.mapreduce.instrumentation import StageStats
+from repro.mapreduce.instrumentation import (RequestStats, StageStats,
+                                             latency_summary)
 from repro.mapreduce.job import (DeviceShuffledData, HashPartitioner,
                                  JobResult, MappedSplit, MapReduceJob,
-                                 Partitioner, Reducer, ShuffledData, TierData,
-                                 concat_mapped, map_split_device, plan_tiers,
-                                 reduce_stage, run_job, run_jobs,
-                                 shuffle_reduce_device, shuffle_stage)
+                                 Partitioner, Reducer, ResidentCatalog,
+                                 ShuffledData, TierData, concat_mapped,
+                                 group_batch_compatible, map_split_device,
+                                 plan_tiers, reduce_stage, run_job, run_jobs,
+                                 shuffle_once, shuffle_reduce_device,
+                                 shuffle_signature, shuffle_stage)
 from repro.mapreduce.executor import (Combiner, StreamSummary,
                                       run_job_streaming, run_jobs_streaming)
 from repro.mapreduce.zones import (PairCountReducer, ZonePartitioner,

@@ -24,6 +24,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from repro.core.amdahl import RooflineTerms
 
 
@@ -107,3 +109,51 @@ class StageStats:
                  overlap_fraction=self.overlap_fraction)
         d["amdahl"] = self.roofline(chips).to_dict()
         return d
+
+
+@dataclasses.dataclass
+class RequestStats:
+    """Per-request latency accounting for the MapReduce query service
+    (``serving/mr_service.py``) — the request-level twin of the per-run
+    ``StageStats``: how long the request waited in the submit queue, which
+    micro-batch admitted it, and the wall of that batch's fused reduce.
+    One batch serves many requests, so ``batch_wall_s`` repeats across the
+    batch's members while ``queue_wait_s``/``latency_s`` are per-request."""
+
+    rid: int = -1
+    job: str = ""
+    catalog: str = ""
+    batch_index: int = -1       # micro-batch that served this request
+    batch_size: int = 0         # requests admitted into that batch
+    n_unique: int = 0           # distinct jobs the batch ran after coalescing
+    t_submit_s: float = 0.0     # service-clock submit time
+    queue_wait_s: float = 0.0   # submit -> admitted into a micro-batch
+    batch_wall_s: float = 0.0   # the admitting batch's end-to-end wall
+    latency_s: float = 0.0      # submit -> result ready
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def latency_summary(requests) -> dict:
+    """Aggregate a stream of ``RequestStats`` into service-level numbers:
+    queries/s over the observed span plus p50/p99 latency and queue wait —
+    the latency-vs-throughput trade the admission window buys (the paper's
+    consolidation question, asked of tails instead of means)."""
+    reqs = list(requests)
+    if not reqs:
+        return {"n": 0, "qps": 0.0, "p50_ms": 0.0, "p99_ms": 0.0,
+                "wait_p50_ms": 0.0, "wait_p99_ms": 0.0, "mean_batch": 0.0}
+    lat = np.array([r.latency_s for r in reqs])
+    wait = np.array([r.queue_wait_s for r in reqs])
+    t0 = min(r.t_submit_s for r in reqs)
+    span = max(max(r.t_submit_s + r.latency_s for r in reqs) - t0, 1e-9)
+    return {
+        "n": len(reqs),
+        "qps": len(reqs) / span,
+        "p50_ms": float(np.percentile(lat, 50)) * 1e3,
+        "p99_ms": float(np.percentile(lat, 99)) * 1e3,
+        "wait_p50_ms": float(np.percentile(wait, 50)) * 1e3,
+        "wait_p99_ms": float(np.percentile(wait, 99)) * 1e3,
+        "mean_batch": float(np.mean([r.batch_size for r in reqs])),
+    }

@@ -707,33 +707,120 @@ def concat_mapped(splits: "list[MappedSplit]") -> MappedSplit:
         nbytes_in=int(sum(s.nbytes_in for s in splits)))
 
 
-def shuffle_reduce_device(jobs, m: MappedSplit, P: int, stats: StageStats,
-                          mesh=None):
-    """Shuffle + reduce one mapped stream (a single split, or the
-    ``concat_mapped`` accumulation of many): count, tier, argsort-bucket,
-    scatter in wire dtype, then the tiered masked reduce — sharded over the
-    mesh's ``data`` axis with a psum combine when one is given.
+@dataclasses.dataclass
+class ResidentCatalog:
+    """Device-resident post-shuffle handle: a catalog mapped and shuffled
+    ONCE into tiered wire-dtype partitions that stay on device (sharded over
+    the mesh's ``data`` axis when one is given), plus the shuffle signature
+    (partitioner / codec / tile / pad_value) that defines which jobs may
+    reduce against it.
 
-    Wall/byte stats ACCUMULATE (``+=``) so streaming runs can call this per
-    split; ratio-style fields (``reduce_padded_ratio``/``shard_padded_ratio``)
-    are left to the caller, which receives the per-call padded/real cell
-    vectors. -> (per-job totals, DeviceShuffledData, shard_pad, shard_real).
-    """
-    j0 = jobs[0]
-    codec = get_codec(j0.codec)
+    ``shuffle_reduce_device`` builds one per call and reduces through it
+    immediately — the one-shot path. The MapReduce query service
+    (``serving/mr_service.py``) instead keeps one alive across many
+    requests, so N queries cost one shuffle ever plus N fused batched
+    reduces (which also reuse the module-level jit/shard_map caches — they
+    key on reducers/codec/mesh, not on the catalog)."""
+
+    partitioner: Partitioner
+    codec: ShuffleCodec
+    tile: int
+    pad_value: float
+    sd: DeviceShuffledData
+    P: int
+    mesh: object = None
+    shard_pad: np.ndarray = None       # [D] padded pair cells per shard
+    shard_real: np.ndarray = None      # [D] real pair cells per shard
+    n_rows: int = 0
+    d: int = 0
+    load_stats: StageStats = None      # the shuffle-once cost (set by shuffle_once)
+
+    @property
+    def nbytes(self) -> int:
+        """Resident wire bytes held on device across requests."""
+        return sum(t.nbytes for t in self.sd.tiers)
+
+    def validate(self, jobs) -> None:
+        """Jobs must share this catalog's shuffle signature to reduce
+        against it (same contract as ``validate_batch``, anchored here)."""
+        for j in jobs:
+            diffs = [k for k, a, b in [
+                ("partitioner", j.partitioner, self.partitioner),
+                ("codec", get_codec(j.codec).name, self.codec.name),
+                ("tile", j.tile, self.tile),
+                ("pad_value", j.reducer.pad_value, self.pad_value),
+            ] if a != b]
+            if diffs:
+                raise ValueError(
+                    f"job {j.name!r} cannot reduce against this resident "
+                    f"catalog: differs in {', '.join(diffs)}")
+
+    def reduce_totals(self, reducers, stats: StageStats):
+        """Tiered masked reduce of ``reducers`` over the resident tiers —
+        the reduce half of ``shuffle_reduce_device``, with the same
+        accumulate (``+=``) stats contract. Decode happens on-device per
+        pass; under a data-axis mesh each tier reduces psum-sharded."""
+        D = _data_axis_size(self.mesh)
+        t0 = time.perf_counter()
+        totals = None
+        for tier in self.sd.tiers:
+            if D > 1:
+                outs = _reduce_tier_sharded(reducers, self.codec, tier,
+                                            self.mesh)
+            else:
+                owned = self.codec.decode_device(*tier.owned_wire)
+                bucket = self.codec.decode_device(*tier.bucket_wire)
+                outs = tuple(r.reduce_partitions(owned, bucket, tier.n_owned,
+                                                 tier.n_bucket)
+                             for r in reducers)
+            totals = outs if totals is None else tuple(
+                jax.tree.map(jnp.add, a, b) for a, b in zip(totals, outs))
+        totals = jax.block_until_ready(totals)
+        stats.reduce_wall_s += time.perf_counter() - t0
+        stats.reduce_bytes += self.nbytes
+        stats.reduce_flops += float(sum(r.flops(self.sd) for r in reducers))
+        return totals
+
+    def run(self, jobs, stats: StageStats = None) -> "list[JobResult]":
+        """Serve ``jobs`` (one or a batch) against the resident tiers with a
+        single fused reduce pass — no map, no shuffle: those were paid once
+        at ``shuffle_once``. -> one JobResult per job, sharing one
+        StageStats whose map/shuffle walls are zero by construction."""
+        jobs = [jobs] if isinstance(jobs, MapReduceJob) else list(jobs)
+        self.validate(jobs)
+        if stats is None:
+            stats = StageStats(job="+".join(j.name for j in jobs))
+        stats.engine = "device"
+        stats.codec = self.codec.name
+        stats.n_items = self.n_rows
+        stats.n_partitions = self.P
+        stats.n_shards = _data_axis_size(self.mesh)
+        stats.reduce_padded_ratio = self.sd.padded_ratio
+        stats.shard_padded_ratio = tuple(
+            float(p / max(r, 1.0))
+            for p, r in zip(self.shard_pad, self.shard_real))
+        totals = self.reduce_totals(tuple(j.reducer for j in jobs), stats)
+        return [JobResult(j.reducer.finalize(t, self.sd), stats)
+                for j, t in zip(jobs, totals)]
+
+
+def _shuffle_mapped(partitioner: Partitioner, codec: ShuffleCodec, tile: int,
+                    pad_value: float, m: MappedSplit, P: int,
+                    stats: StageStats, mesh=None) -> ResidentCatalog:
+    """Shuffle one mapped stream into device-resident tiers: count, tier,
+    argsort-bucket, scatter in wire dtype — the shuffle half of
+    ``shuffle_reduce_device``, accumulating (``+=``) into ``stats``. Tier
+    partition counts are padded to a multiple of the mesh's data axis size
+    with phantom (zero-count) partitions, so every tier splits evenly
+    across shards. -> ResidentCatalog."""
     D = _data_axis_size(mesh)
     d = m.d
-
-    # shuffle: count, tier, argsort-bucket, scatter (wire dtype). Tier
-    # partition counts are padded to a multiple of the mesh's data axis
-    # size with phantom (zero-count) partitions, so every tier splits
-    # evenly across shards.
     t0 = time.perf_counter()
     keys_h = np.asarray(jax.block_until_ready(m.keys))
     dest_h = np.asarray(m.dest_eff)
     n_owned = np.bincount(keys_h, minlength=P).astype(np.int64)
     n_bucket = np.bincount(dest_h, minlength=P + 1)[:P].astype(np.int64)
-    plan = plan_tiers(n_owned, n_bucket, j0.tile, pad_partitions_to=D)
+    plan = plan_tiers(n_owned, n_bucket, tile, pad_partitions_to=D)
     part_tier = np.full(P + 1, -1, np.int32)
     part_local = np.zeros(P + 1, np.int32)
     specs = []
@@ -786,27 +873,55 @@ def shuffle_reduce_device(jobs, m: MappedSplit, P: int, stats: StageStats,
     stats.codec = codec.name
     stats.engine = "device"
     stats.n_shards = D
+    return ResidentCatalog(partitioner, codec, tile, pad_value, sd, P,
+                           mesh=mesh, shard_pad=shard_pad,
+                           shard_real=shard_real, n_rows=m.n_rows, d=d)
 
-    # reduce: decode on-device, then one batched masked kernel pass per tier
-    # (sharded over the mesh's data axis + psum tier combine when present)
+
+def shuffle_once(partitioner: Partitioner, items, *, codec="identity",
+                 tile: int = 256, pad_value: float = 0.0, mesh=None,
+                 stats: StageStats = None) -> ResidentCatalog:
+    """Load + map + shuffle a catalog ONCE into device-resident tiered
+    wire-dtype partitions. The returned handle's ``run(jobs)`` serves any
+    batch of signature-compatible jobs as a pure fused reduce — the
+    shuffle-then-reduce decomposition that ``run_jobs`` executes per call
+    and the MR query service amortizes across requests. The shuffle cost
+    lands in ``stats`` (also kept as ``ResidentCatalog.load_stats``)."""
+    codec = get_codec(codec)
+    if stats is None:
+        stats = StageStats(job="shuffle_once")
+    P = int(partitioner.n_partitions(
+        items if isinstance(items, jax.Array) else np.asarray(items)))
     t0 = time.perf_counter()
-    reducers = tuple(j.reducer for j in jobs)
-    totals = None
-    for tier in tiers:
-        if D > 1:
-            outs = _reduce_tier_sharded(reducers, codec, tier, mesh)
-        else:
-            owned = codec.decode_device(*tier.owned_wire)
-            bucket = codec.decode_device(*tier.bucket_wire)
-            outs = tuple(r.reduce_partitions(owned, bucket, tier.n_owned,
-                                             tier.n_bucket) for r in reducers)
-        totals = outs if totals is None else tuple(
-            jax.tree.map(jnp.add, a, b) for a, b in zip(totals, outs))
-    totals = jax.block_until_ready(totals)
-    stats.reduce_wall_s += time.perf_counter() - t0
-    stats.reduce_bytes += sum(t.nbytes for t in tiers)
-    stats.reduce_flops += float(sum(j.reducer.flops(sd) for j in jobs))
-    return totals, sd, shard_pad, shard_real
+    m = map_split_device(partitioner, codec, items, P)
+    stats.map_wall_s += time.perf_counter() - t0
+    stats.map_bytes += m.nbytes_in
+    cat = _shuffle_mapped(partitioner, codec, tile, pad_value, m, P, stats,
+                          mesh)
+    cat.load_stats = stats
+    return cat
+
+
+def shuffle_reduce_device(jobs, m: MappedSplit, P: int, stats: StageStats,
+                          mesh=None):
+    """Shuffle + reduce one mapped stream (a single split, or the
+    ``concat_mapped`` accumulation of many): count, tier, argsort-bucket,
+    scatter in wire dtype, then the tiered masked reduce — sharded over the
+    mesh's ``data`` axis with a psum combine when one is given. Decomposed
+    as ``_shuffle_mapped`` (-> ``ResidentCatalog``) followed by
+    ``ResidentCatalog.reduce_totals``, the same two halves the query
+    service runs at catalog-load and per-request time.
+
+    Wall/byte stats ACCUMULATE (``+=``) so streaming runs can call this per
+    split; ratio-style fields (``reduce_padded_ratio``/``shard_padded_ratio``)
+    are left to the caller, which receives the per-call padded/real cell
+    vectors. -> (per-job totals, DeviceShuffledData, shard_pad, shard_real).
+    """
+    j0 = jobs[0]
+    cat = _shuffle_mapped(j0.partitioner, get_codec(j0.codec), j0.tile,
+                          j0.reducer.pad_value, m, P, stats, mesh)
+    totals = cat.reduce_totals(tuple(j.reducer for j in jobs), stats)
+    return totals, cat.sd, cat.shard_pad, cat.shard_real
 
 
 def host_shuffle_reduce(jobs, items, stats: StageStats, mesh=None):
@@ -849,6 +964,32 @@ def host_shuffle_reduce(jobs, items, stats: StageStats, mesh=None):
 # ---------------------------------------------------------------------------
 # Entry points (one-split special case of the streaming executor)
 # ---------------------------------------------------------------------------
+
+def shuffle_signature(job: MapReduceJob) -> tuple:
+    """The (partitioner, codec name, tile, pad_value) key of a job's
+    map+shuffle stages. Jobs sharing it can batch over ONE shuffle
+    (``run_jobs``) or reduce against one ``ResidentCatalog``."""
+    return (job.partitioner, get_codec(job.codec).name, job.tile,
+            job.reducer.pad_value)
+
+
+def group_batch_compatible(jobs) -> "list[list[MapReduceJob]]":
+    """Partition ``jobs`` into the fewest groups that each share one shuffle
+    signature (order preserved within a group) — how the MR query service
+    coalesces an admission window's requests into fused reduce passes."""
+    groups: list[list[MapReduceJob]] = []
+    sigs: list[tuple] = []
+    for j in jobs:
+        sig = shuffle_signature(j)
+        for g, s in zip(groups, sigs):
+            if s == sig:
+                g.append(j)
+                break
+        else:
+            groups.append([j])
+            sigs.append(sig)
+    return groups
+
 
 def validate_batch(jobs) -> None:
     """Batched jobs must share one shuffle (partitioner/codec/tile/pad)."""

@@ -1,3 +1,4 @@
 from repro.serving.engine import (
     ServeEngine, Request, make_prefill_step, make_decode_step,
 )
+from repro.serving.mr_service import MRQueryService, MRRequest

@@ -67,8 +67,14 @@ class ServeEngine:
             self.cache = mdl.init_cache(cfg, slots, max_len)
         self.pos = 0
         self.cur = jnp.zeros((slots, 1), jnp.int32)
+        self.closed = False
 
     def submit(self, req: Request):
+        if self.closed:
+            raise RuntimeError(
+                "ServeEngine is closed: run() drained its queue (or the KV "
+                "cache is full) — a submission now would silently never be "
+                "served")
         self.queue.append(req)
 
     def _fill_slots(self):
@@ -115,4 +121,9 @@ class ServeEngine:
             steps += 1
             if self.pos >= self.max_len - 1:
                 break
+        # drained (or cache exhausted): later submissions could never be
+        # served by this engine instance, so reject them at the door
+        if self.pos >= self.max_len - 1 or not (any(self.active)
+                                                or self.queue):
+            self.closed = True
         return steps

@@ -1,0 +1,299 @@
+"""MapReduce query service: a resident sharded catalog serving online queries.
+
+The LM side already serves continuously (``serving/engine.py``'s slot-based
+``ServeEngine``); this is its MapReduce twin, shaped for the workload the
+paper actually argues about — a long-running node kept busy by a stream of
+many small data-intensive requests against shared resident data (the HDFS
+workload-consolidation result: throughput hinges on co-scheduling, not on
+one-shot batch jobs):
+
+- the catalog is loaded, mapped, and shuffled ONCE (``shuffle_once`` ->
+  ``ResidentCatalog``): its tiered wire-dtype partitions stay device-resident
+  (psum-sharded over a ``data``-axis mesh when one is given) across every
+  request the service will ever answer;
+- queries enter a submit queue and an admission window groups them into
+  micro-batches — count-triggered at ``max_batch`` or time-triggered after
+  ``max_wait_s``, whichever fires first, the same slot-fill trade
+  ``ServeEngine`` makes — then each batch is grouped per catalog and
+  COALESCED (identical jobs run once; distinct compatible jobs fuse into one
+  batched reduce pass, the ``run_jobs`` multi-job path), so N queries cost
+  one shuffle ever + ~one reduce pass per distinct job;
+- jit/shard_map caches persist across requests for free: the module-level
+  caches in ``mapreduce/job.py`` key on (reducers, codec, mesh), so a
+  recurring query mix stops retracing after its first batch;
+- every request carries a ``RequestStats`` (queue wait, batch wall, latency);
+  ``latency_summary`` turns the stream into qps/p50/p99 rows (the
+  ``fig5_service`` benchmark), and per-batch walls feed an optional
+  ``straggler_monitor=`` hook with the same ``record(index, wall_s)``
+  contract as the streaming executor — ``ft.SpeculativePolicy`` spots slow
+  batches in serving mode exactly as it spots slow splits in batch mode.
+
+    svc = MRQueryService(max_batch=16, max_wait_s=0.002)
+    svc.load_catalog("sky", xyz, ZonePartitioner(0.02), codec="int16")
+    with svc:                              # background admission thread
+        reqs = [svc.submit(neighbor_search_job(r, partitioner=part,
+                                               codec="int16"), catalog="sky")
+                for r in radii]
+        outs = [r.result() for r in reqs]
+    svc.latency_summary()                  # {"qps": ..., "p99_ms": ...}
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+
+from repro.mapreduce.codecs import get_codec
+from repro.mapreduce.instrumentation import RequestStats, latency_summary
+from repro.mapreduce.job import (MapReduceJob, ResidentCatalog, shuffle_once)
+
+
+def _job_key(job: MapReduceJob) -> tuple:
+    """Equality key for request coalescing: two submissions with this key
+    are THE SAME query and share one reduce. Codec instances (e.g. the
+    wordcount job's per-vocab ``Int16Codec``) compare by parameters, not
+    identity, so independently-built identical jobs still coalesce."""
+    c = get_codec(job.codec)
+    return (job.name, job.partitioner, job.reducer, job.tile,
+            type(c).__name__, tuple(sorted(vars(c).items())))
+
+
+@dataclasses.dataclass
+class MRRequest:
+    """One queued query: a ``MapReduceJob`` against a named resident
+    catalog. ``result()`` blocks until the admitting micro-batch completes;
+    ``stats`` is the request's ``RequestStats`` once served."""
+
+    rid: int
+    job: MapReduceJob
+    catalog: str
+    t_submit: float
+    output: object = None
+    error: BaseException | None = None
+    stats: RequestStats | None = None
+    _done: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False)
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: float | None = None):
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request {self.rid} still queued/running "
+                               f"after {timeout}s")
+        if self.error is not None:
+            raise self.error
+        return self.output
+
+
+class MRQueryService:
+    """Long-running MapReduce query service over resident shuffled catalogs.
+
+    Two execution modes share one admission path: ``start()`` (or the
+    context manager) runs micro-batches on a background thread as windows
+    fire; ``run_pending()`` drains synchronously — deterministic, and its
+    ``batch_sizes=`` override replays ANY partition of the queue into
+    micro-batches (the batching-determinism property tests use this).
+    ``close()`` rejects further submits, serves what is queued, and joins
+    the worker; like ``ServeEngine`` after ``run()`` drains, a closed
+    service raises on ``submit``.
+    """
+
+    def __init__(self, *, mesh=None, max_batch: int = 16,
+                 max_wait_s: float = 0.002, straggler_monitor=None,
+                 clock=time.perf_counter):
+        self.mesh = mesh
+        self.max_batch = int(max_batch)
+        self.max_wait_s = float(max_wait_s)
+        self.straggler_monitor = straggler_monitor
+        self.clock = clock
+        self.catalogs: dict[str, ResidentCatalog] = {}
+        self.request_stats: list[RequestStats] = []
+        self.batches: list[dict] = []       # per-batch records (size, wall, ...)
+        self.closed = False
+        self._queue: deque[MRRequest] = deque()
+        self._cond = threading.Condition()
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._rid = 0
+
+    # -- catalog management -------------------------------------------------
+
+    def load_catalog(self, name: str, items, partitioner, *,
+                     codec="identity", tile: int = 256,
+                     pad_value: float = 0.0) -> ResidentCatalog:
+        """Map + shuffle ``items`` once into device-resident tiers under
+        ``name``; every later query against ``name`` is a pure reduce."""
+        if self.closed:
+            raise RuntimeError("MRQueryService is closed")
+        cat = shuffle_once(partitioner, items, codec=codec, tile=tile,
+                           pad_value=pad_value, mesh=self.mesh)
+        self.catalogs[name] = cat
+        return cat
+
+    def catalog(self, name: str = "default") -> ResidentCatalog:
+        return self.catalogs[name]
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, job: MapReduceJob, *,
+               catalog: str = "default") -> MRRequest:
+        """Enqueue one query. Validates the job against the target catalog's
+        shuffle signature HERE (fail fast at the caller, not in the worker);
+        raises RuntimeError once the service is closed — submissions would
+        otherwise enqueue into a dead service and never complete."""
+        cat = self.catalogs.get(catalog)
+        if cat is None:
+            raise KeyError(f"no catalog {catalog!r} loaded "
+                           f"(have {sorted(self.catalogs)}); "
+                           f"call load_catalog() first")
+        cat.validate([job])
+        with self._cond:
+            if self.closed:
+                raise RuntimeError(
+                    "MRQueryService is closed: submit() after close() "
+                    "would never be served (same guard as ServeEngine "
+                    "after run() drains)")
+            req = MRRequest(self._rid, job, catalog, self.clock())
+            self._rid += 1
+            self._queue.append(req)
+            self._cond.notify()
+        return req
+
+    @property
+    def pending(self) -> int:
+        with self._cond:
+            return len(self._queue)
+
+    # -- admission / batching policy ----------------------------------------
+
+    def _admit(self) -> list[MRRequest]:
+        """Take one micro-batch off the queue (worker thread): the first
+        waiting request opens an admission window that closes after
+        ``max_wait_s`` OR as soon as ``max_batch`` requests are queued —
+        waiting fills the batch (throughput), the deadline bounds queue
+        wait (latency). ServeEngine's slot-fill loop, for reduces."""
+        with self._cond:
+            while not self._queue and not self._stop.is_set():
+                self._cond.wait(timeout=0.05)
+            if not self._queue:
+                return []
+            deadline = self.clock() + self.max_wait_s
+            while len(self._queue) < self.max_batch and not self._stop.is_set():
+                left = deadline - self.clock()
+                if left <= 0:
+                    break
+                self._cond.wait(timeout=left)
+            take = min(self.max_batch, len(self._queue))
+            return [self._queue.popleft() for _ in range(take)]
+
+    def _run_batch(self, batch: list[MRRequest]) -> None:
+        """Serve one admitted micro-batch: group by catalog, coalesce
+        duplicate jobs, one fused batched reduce per catalog group, then
+        stamp RequestStats / wake waiters / feed the straggler hook."""
+        t_admit = self.clock()
+        bidx = len(self.batches)
+        by_cat: dict[str, list[MRRequest]] = {}
+        for r in batch:
+            by_cat.setdefault(r.catalog, []).append(r)
+        n_unique = 0
+        for cname, reqs in by_cat.items():
+            cat = self.catalogs[cname]
+            uniq_keys: list[tuple] = []
+            uniq_jobs: list[MapReduceJob] = []
+            slots: list[int] = []       # per-request index into uniq_jobs
+            for r in reqs:
+                k = _job_key(r.job)
+                try:
+                    slots.append(uniq_keys.index(k))
+                except ValueError:
+                    slots.append(len(uniq_jobs))
+                    uniq_keys.append(k)
+                    uniq_jobs.append(r.job)
+            n_unique += len(uniq_jobs)
+            try:
+                results = cat.run(uniq_jobs)
+                for r, s in zip(reqs, slots):
+                    r.output = results[s].output
+            except BaseException as e:   # surface through every waiter
+                for r in reqs:
+                    r.error = e
+        t_done = self.clock()
+        wall = t_done - t_admit
+        self.batches.append({"batch": bidx, "size": len(batch),
+                             "n_unique": n_unique, "wall_s": wall})
+        if self.straggler_monitor is not None:
+            self.straggler_monitor.record(bidx, wall)
+        for r in batch:
+            r.stats = RequestStats(
+                rid=r.rid, job=r.job.name, catalog=r.catalog,
+                batch_index=bidx, batch_size=len(batch), n_unique=n_unique,
+                t_submit_s=r.t_submit, queue_wait_s=t_admit - r.t_submit,
+                batch_wall_s=wall, latency_s=t_done - r.t_submit)
+            self.request_stats.append(r.stats)
+            r._done.set()
+
+    # -- execution: synchronous drain or background serving thread ----------
+
+    def run_pending(self, *, batch_sizes=None) -> int:
+        """Synchronously drain the queue in micro-batches. ``batch_sizes``
+        forces an explicit partition of the queue (replay / determinism
+        tests); default chunks by ``max_batch`` with no admission wait.
+        -> number of requests served."""
+        sizes = iter(batch_sizes if batch_sizes is not None else [])
+        served = 0
+        while True:
+            with self._cond:
+                if not self._queue:
+                    break
+                k = next(sizes, self.max_batch)
+                k = max(1, min(int(k), len(self._queue)))
+                batch = [self._queue.popleft() for _ in range(k)]
+            self._run_batch(batch)
+            served += len(batch)
+        return served
+
+    def _serve_loop(self) -> None:
+        while True:
+            batch = self._admit()
+            if batch:
+                self._run_batch(batch)
+            elif self._stop.is_set():
+                return
+
+    def start(self) -> "MRQueryService":
+        """Start the background admission/serving thread (idempotent)."""
+        if self.closed:
+            raise RuntimeError("MRQueryService is closed")
+        if self._thread is None:
+            self._stop.clear()
+            self._thread = threading.Thread(target=self._serve_loop,
+                                            name="mr-service", daemon=True)
+            self._thread.start()
+        return self
+
+    def close(self) -> None:
+        """Reject further submits, serve everything already queued, and
+        stop the worker. Idempotent; also the context-manager exit."""
+        with self._cond:
+            self.closed = True
+            self._stop.set()
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=60.0)
+            self._thread = None
+        self.run_pending()               # anything the worker left behind
+
+    def __enter__(self) -> "MRQueryService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- accounting ---------------------------------------------------------
+
+    def latency_summary(self) -> dict:
+        """qps + p50/p99 latency over everything served so far."""
+        return latency_summary(self.request_stats)

@@ -358,6 +358,44 @@ def check_mapreduce_sharded():
     print("mapreduce sharded == single-device OK")
 
 
+def check_mapreduce_service_sharded():
+    """MR query service on an 8-device data mesh: queries served from the
+    resident psum-sharded catalog (micro-batched, duplicates coalesced) are
+    bit-identical to a fresh per-query mesh run AND to the host-engine
+    oracle; catalog reuse across batches never reshuffles."""
+    from repro.core.compat import make_mesh as mk
+    from repro.data import sky
+    from repro.mapreduce import (ZonePartitioner, neighbor_search_job,
+                                 neighbor_statistics_job, run_job)
+    from repro.serving.mr_service import MRQueryService
+
+    mesh = mk((8,), ("data",))
+    xyz = sky.make_catalog(900, 5)
+    radius = 0.09
+    part = ZonePartitioner(radius)
+    edges = np.linspace(0.03, radius, 4)
+    jobs = [neighbor_search_job(radius, partitioner=part, codec="int16",
+                                tile=64),
+            neighbor_search_job(radius / 2, partitioner=part, codec="int16",
+                                tile=64),
+            neighbor_statistics_job(edges / sky.ARCSEC, partitioner=part,
+                                    codec="int16", tile=64)]
+    svc = MRQueryService(mesh=mesh, max_batch=4)
+    cat = svc.load_catalog("sky", xyz, part, codec="int16", tile=64)
+    assert cat.run(jobs[0])[0].stats.n_shards == 8
+    reqs = [svc.submit(j, catalog="sky") for j in jobs + jobs]
+    svc.run_pending()                  # batches of 4: [j0 j1 j2 j0] [j1 j2]
+    assert [b["size"] for b in svc.batches] == [4, 2]
+    assert svc.batches[0]["n_unique"] == 3       # duplicate j0 coalesced
+    for r, j in zip(reqs, jobs + jobs):
+        dev = run_job(j, xyz, mesh=mesh).output
+        host = run_job(j, xyz, mesh=mesh, engine="host").output
+        np.testing.assert_array_equal(r.output, dev)
+        np.testing.assert_array_equal(np.asarray(dev), np.asarray(host))
+    svc.close()
+    print("mapreduce service on 8-shard mesh == per-query mesh/host OK")
+
+
 if __name__ == "__main__":
     checks = {
         "hier": check_hierarchical_psum,
@@ -368,5 +406,6 @@ if __name__ == "__main__":
         "mapreduce-device": check_mapreduce_device_sharded,
         "mapreduce-ragged": check_mapreduce_ragged_shards,
         "mapreduce-streaming": check_mapreduce_streaming_sharded,
+        "mapreduce-service": check_mapreduce_service_sharded,
     }
     checks[sys.argv[1]]()

@@ -114,3 +114,28 @@ def test_coordinator_aborts_below_min_hosts():
     c = Coordinator([0, 1], cfg)
     act = c.tick(100.0)
     assert act["action"] == "abort"
+
+
+def test_speculative_from_service_batches():
+    """Serving mode: the MR query service feeds per-micro-batch walls into
+    the policy through the same straggler_monitor= contract the streaming
+    executor uses, so a stuck batch is the re-dispatch candidate."""
+    import numpy as np
+    from repro.data import sky
+    from repro.mapreduce import ZonePartitioner, neighbor_search_job
+    from repro.serving import MRQueryService
+    pol = SpeculativePolicy(SpeculativeConfig(min_finished=3))
+    part = ZonePartitioner(0.1)
+    svc = MRQueryService(max_batch=1, straggler_monitor=pol)
+    svc.load_catalog("sky", sky.make_catalog(300, 0), part, tile=64)
+    for _ in range(4):
+        svc.submit(neighbor_search_job(0.1, partitioner=part, tile=64),
+                   catalog="sky")
+    svc.run_pending()                   # max_batch=1 -> 4 micro-batches
+    assert len(pol.walls) == 4
+    assert pol.walls == [b["wall_s"] for b in svc.batches]
+    med = float(np.median(pol.walls))
+    pol.running(4, 10_000 * max(med, 1e-9))   # a batch stuck way past median
+    p = pol.propose()
+    assert p["action"] == "speculate" and p["split"] == 4
+    svc.close()

@@ -20,7 +20,12 @@ sizes instead of hand-picked examples:
    monolithic run for search/stats/wordcount with exact and int16 codecs,
    and map-side combine (combiner on vs off) changes nothing for monoid
    reducers. The same properties re-run on an 8-device mesh in
-   ``md_check.py mapreduce-streaming`` (fixed cases, subprocess).
+   ``md_check.py mapreduce-streaming`` (fixed cases, subprocess);
+5. service batching determinism — ANY partition of a request set into
+   micro-batches through the MR query service's resident catalog returns
+   bit-identical per-request results to single-request execution
+   (coalescing and fused batched reduces change scheduling, never
+   results). Mesh variant: ``md_check.py mapreduce-service``.
 """
 import numpy as np
 import pytest
@@ -236,3 +241,48 @@ def test_streaming_wordcount_and_combiner_equality(n, vocab, seed, codec,
         np.testing.assert_array_equal(comb.output, want)
     np.testing.assert_array_equal(
         want, np.bincount(toks, minlength=vocab))
+
+# ---------------------------------------------------------------------------
+# 5. query-service micro-batching == single-request execution
+# ---------------------------------------------------------------------------
+
+@given(n=st.sampled_from([1, 60, 200]), seed=st.integers(0, 30),
+       codec=st.sampled_from(["identity", "int16"]), clump=st.booleans(),
+       picks=st.lists(st.integers(0, 3), min_size=1, max_size=10),
+       data=st.data())
+def test_service_any_microbatch_partition_matches_single(n, seed, codec,
+                                                         clump, picks, data):
+    """The resident catalog's shuffle IS the shuffle run_job would do, and
+    coalesced fused reduces are the run_jobs batching — so any partition of
+    a request stream into micro-batches (drawn at random, down to
+    one-request batches) must return bit-identical per-request results to
+    fresh single-request runs."""
+    from repro.serving.mr_service import MRQueryService
+    xyz = _catalog(n, seed, clump)
+    radius = 0.12
+    part = ZonePartitioner(radius)
+    edges = np.linspace(radius / 4, radius, 4)
+    menu = [neighbor_search_job(radius, partitioner=part, codec=codec,
+                                tile=64),
+            neighbor_search_job(radius / 2, partitioner=part, codec=codec,
+                                tile=64),
+            neighbor_statistics_job(edges / sky.ARCSEC, partitioner=part,
+                                    codec=codec, tile=64),
+            neighbor_statistics_job(edges[:2] / sky.ARCSEC, partitioner=part,
+                                    codec=codec, tile=64)]
+    stream = [menu[p] for p in picks]
+    singles = [run_job(j, xyz).output for j in stream]
+    sizes = []
+    left = len(stream)
+    while left:                         # random partition of the queue
+        k = data.draw(st.integers(1, left))
+        sizes.append(k)
+        left -= k
+    svc = MRQueryService(max_batch=len(stream))
+    svc.load_catalog("sky", xyz, part, codec=codec, tile=64)
+    reqs = [svc.submit(j, catalog="sky") for j in stream]
+    svc.run_pending(batch_sizes=sizes)
+    assert [b["size"] for b in svc.batches] == sizes
+    for r, want in zip(reqs, singles):
+        np.testing.assert_array_equal(r.output, want)
+    svc.close()

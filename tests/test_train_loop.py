@@ -84,8 +84,14 @@ def test_serve_engine_completes_requests(cpu_mesh):
     with use_mesh(cpu_mesh, make_rules(cpu_mesh)):
         params, biases = mdl.init(cfg, jax.random.PRNGKey(0))
     eng = ServeEngine(cfg, rc, params, biases, cpu_mesh, slots=2, max_len=64)
+    assert not eng.closed
     for rid in range(4):
         eng.submit(Request(rid=rid, prompt=[1, 2, 3], max_new=5))
     eng.run(max_steps=60)
     assert len(eng.queue) == 0
     assert all(s is None for s in eng.active)
+    # drained -> closed: a late submission would never be served, so it
+    # must be rejected instead of silently enqueued into a dead engine
+    assert eng.closed
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.submit(Request(rid=9, prompt=[1], max_new=2))
