@@ -394,6 +394,73 @@ def fig5_service():
     return rows
 
 
+def fig6_speculation():
+    """Speculative re-execution recovering an injected straggler (Hadoop's
+    speculative-task claim, measured end to end on the lane scheduler).
+    Three runs of the same 8-split neighbor search on 4 concurrent lanes:
+    clean (no fault), a straggler split whose first fetch stalls ~3x the
+    clean wall with speculation OFF (the stall is served out), and the same
+    straggler with speculation ON (the slow attempt is cloned onto a free
+    lane, the clone's fast re-fetch wins, the stalled original is cancelled
+    mid-sleep). Gates: without speculation the straggler costs >= 2x the
+    clean wall; with it the wall lands within 1.3x clean, recovering >= 70%%
+    of the injected slowdown — and all three runs are bit-identical."""
+    from repro.data import ArraySplits, sky
+    from repro.ft import FaultySplitSource, SpeculativeConfig
+    from repro.mapreduce import neighbor_search_job, run_job_streaming
+
+    xyz = sky.make_catalog(20000, 0)
+    job = neighbor_search_job(0.02, codec="int16", tile=256)
+    n_splits, n_lanes = 8, 4
+    spec_cfg = SpeculativeConfig(slowdown=1.5, min_finished=2, max_clones=1)
+
+    def lanes_run(src, speculate=None):
+        return run_job_streaming(job, src, n_lanes=n_lanes,
+                                 speculate=speculate)
+
+    def clean_src():
+        return ArraySplits(xyz, n_splits)
+
+    lanes_run(clean_src())                      # warmup (compile caches)
+    clean = min((lanes_run(clean_src()) for _ in range(2)),
+                key=lambda r: r.stats.elapsed_s)
+    t_clean = clean.stats.elapsed_s
+    rows = [("fig6_spec_nostraggler", t_clean * 1e6,
+             f"pairs={clean.output}_nsplits={n_splits}_nlanes={n_lanes}")]
+
+    delay = 3.0 * t_clean                       # the injected straggler
+
+    def straggler_src():
+        return FaultySplitSource(clean_src(), delays={0: delay})
+
+    # speculation OFF: the stalled fetch is served out in full
+    nospec = lanes_run(straggler_src())
+    t_nospec = nospec.stats.elapsed_s
+    rows.append(("fig6_spec_straggler_nospec", t_nospec * 1e6,
+                 f"delay_s={delay:.2f}_slowdown={t_nospec / t_clean:.1f}x"))
+
+    # speculation ON: clone wins, stalled original cancelled mid-sleep
+    spec = min((lanes_run(straggler_src(), speculate=spec_cfg)
+                for _ in range(2)), key=lambda r: r.stats.elapsed_s)
+    t_spec = spec.stats.elapsed_s
+    recovered = (t_nospec - t_spec) / (t_nospec - t_clean)
+    rows.append(("fig6_spec_straggler_spec", t_spec * 1e6,
+                 f"speculated={spec.stats.speculated}"
+                 f"_clonewins={spec.stats.clone_wins}"
+                 f"_vs_clean={t_spec / t_clean:.2f}x"
+                 f"_recovered={recovered:.2f}"))
+
+    assert clean.output == nospec.output == spec.output   # bit parity
+    assert spec.stats.speculated >= 1 and spec.stats.clone_wins >= 1
+    assert t_nospec >= 2.0 * t_clean, \
+        f"injected straggler too cheap: {t_nospec / t_clean:.2f}x clean"
+    assert t_spec <= 1.3 * t_clean, \
+        f"speculation failed to recover: {t_spec / t_clean:.2f}x clean"
+    assert recovered >= 0.7, \
+        f"recovered only {recovered:.0%} of the injected slowdown"
+    return rows
+
+
 def table3_apps():
     """App runtimes vs radius (the paper's theta sweep) through the Job API,
     with the per-job Amdahl numbers the paper's Table 4 derives per task —
@@ -525,4 +592,5 @@ def table4_amdahl():
 
 
 ALL = [fig1_direct_io, table2_network, fig2_pipeline, fig3_improvements,
-       fig4_streaming, fig5_service, table3_apps, table4_amdahl]
+       fig4_streaming, fig5_service, fig6_speculation, table3_apps,
+       table4_amdahl]

@@ -106,6 +106,7 @@ class Prefetcher:
         self._start_k = start
         self._n = n
         self._thread: threading.Thread | None = None
+        self._busy_k: int | None = None    # index currently inside produce()
 
     def start(self) -> "Prefetcher":
         if self._thread is None:
@@ -129,11 +130,14 @@ class Prefetcher:
                 self._put(None)
                 return
             t0 = time.perf_counter()
+            self._busy_k = k
             try:
                 item = self._produce(k)
             except BaseException as e:         # surface in the consumer
                 self._put(e)
                 return
+            finally:
+                self._busy_k = None
             self._put((k, item, time.perf_counter() - t0))
             k += 1
 
@@ -150,10 +154,24 @@ class Prefetcher:
         k, item, prep = rec
         return k, item, wait, prep
 
-    def stop(self):
+    def stop(self, timeout: float = 2.0):
+        """Stop and join the producer thread. A failed join used to pass
+        silently — a worker wedged inside ``produce(k)`` would leak past the
+        ``with`` block and hold its buffers forever; now it raises, naming
+        the stuck fetch so the I/O that wedged is identifiable."""
         self._stop.set()
         if self._thread:
-            self._thread.join(timeout=2.0)
+            self._thread.join(timeout=timeout)
+            if self._thread.is_alive():
+                k = self._busy_k
+                where = (f"inside produce({k})" if k is not None
+                         else "blocked handing off an item")
+                raise RuntimeError(
+                    f"Prefetcher worker thread leaked: still {where} "
+                    f"{timeout}s after stop() — the fetch for "
+                    f"{'item ' + str(k) if k is not None else 'the queue'} "
+                    f"is stuck and its buffers cannot be reclaimed")
+            self._thread = None
 
     def __enter__(self) -> "Prefetcher":
         return self.start()

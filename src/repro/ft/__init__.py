@@ -1,3 +1,6 @@
 from repro.ft.stragglers import (SpeculativeConfig, SpeculativePolicy,
-                                 StragglerConfig, StragglerMonitor)
+                                 StragglerConfig, StragglerMonitor,
+                                 WallTracker)
 from repro.ft.coordinator import Coordinator, CoordinatorConfig, State
+from repro.ft.chaos import (CancelledFetch, FaultySplitSource, LaneChaos,
+                            LaneDeath, TransientSplitError)

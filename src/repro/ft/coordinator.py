@@ -4,6 +4,13 @@ State machine:  HEALTHY -> DEGRADED (missed heartbeats) -> REMESH (host declared
 dead) -> HEALTHY (after elastic restore).  Decisions are pure functions of observed
 events so they can be tested deterministically; the launcher executes them
 (checkpoint restore onto the surviving mesh via Checkpointer's elastic path).
+
+The same machine now also tracks LANE liveness: ``mapreduce.executor.LanePool``
+registers its lanes as "hosts", forwards each lane's last heartbeat into
+``heartbeat()`` from the drain loop, and executes ``tick()``'s verdicts —
+"remesh" shrinks the pool and requeues the dead lanes' in-flight splits,
+"abort" (below ``min_hosts`` survivors) fails the job. One failure-handling
+state machine for training hosts, serving batches, and MapReduce lanes.
 """
 from __future__ import annotations
 
@@ -66,3 +73,7 @@ class Coordinator:
     def remesh_done(self):
         self.hosts -= self.dead
         self.state = State.HEALTHY
+
+    def alive(self) -> list[int]:
+        """Hosts (or lanes) not declared dead, sorted."""
+        return sorted(self.hosts - self.dead)

@@ -38,7 +38,8 @@ from repro.mapreduce.job import (DeviceShuffledData, HashPartitioner,
                                  plan_tiers, reduce_stage, run_job, run_jobs,
                                  shuffle_once, shuffle_reduce_device,
                                  shuffle_signature, shuffle_stage)
-from repro.mapreduce.executor import (Combiner, StreamSummary,
+from repro.mapreduce.executor import (Combiner, JobDeadlineExceeded,
+                                      LaneCancelled, LanePool, StreamSummary,
                                       run_job_streaming, run_jobs_streaming)
 from repro.mapreduce.zones import (PairCountReducer, ZonePartitioner,
                                    neighbor_pairs_dense, neighbor_search_job)

@@ -35,13 +35,28 @@ two things keep memory and wall time bounded:
 reduces through the psum-sharded tier path, and the cross-split combine
 operates on the replicated partial.
 
+- **Concurrent lanes + fault tolerance** (``n_lanes=``, ``speculate=``,
+  ``max_retries=``, ``deadline_s=``, ``chaos=``). A ``LanePool`` dispatches
+  independent splits to concurrent worker lanes (pinned one-per-device when
+  several jax devices and no mesh are present) with Hadoop's reliability
+  semantics made real: ``SpeculativePolicy`` verdicts clone the slow split
+  onto a free lane and the first finisher commits (loser cancelled,
+  buffers reclaimed, bit-identical by the same multiset/commutative-sum
+  contracts), transient split failures retry with bounded backoff, a dead
+  or wedged lane requeues its split on the survivors through the
+  ``ft.Coordinator`` liveness machine, and ``deadline_s`` bounds the job.
+
     src = MemmapCatalogSplits("catalog.f32", d=3, rows_per_split=1 << 20)
     res = run_job_streaming(neighbor_search_job(0.02, codec="int16"), src)
     res.stats.overlap_fraction, res.stats.n_splits
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import itertools
+import queue
+import threading
 import time
 
 import jax
@@ -49,6 +64,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.pipeline import Prefetcher, SplitSource  # noqa: F401
+from repro.ft.chaos import CancelledFetch, LaneDeath, TransientSplitError
+from repro.ft.coordinator import Coordinator, CoordinatorConfig
+from repro.ft.stragglers import SpeculativePolicy
 from repro.mapreduce.codecs import get_codec
 from repro.mapreduce.instrumentation import StageStats
 from repro.mapreduce.job import (JobResult, concat_mapped,
@@ -180,13 +198,377 @@ def _resolve_combiner(combiner, jobs, codec):
 
 
 # ---------------------------------------------------------------------------
+# LanePool: concurrent split lanes + executed speculative re-execution
+# ---------------------------------------------------------------------------
+
+class LaneCancelled(Exception):
+    """Internal control flow: a losing attempt noticed its cancel event
+    between stages and unwound; its partial buffers are dropped."""
+
+
+class JobDeadlineExceeded(TimeoutError):
+    """The per-job ``deadline_s`` elapsed before every split committed."""
+
+
+#: exceptions a lane treats as transient — re-dispatched with bounded
+#: backoff up to ``max_retries`` (Hadoop's per-task retry budget)
+RETRYABLE = (TransientSplitError, OSError)
+
+
+@dataclasses.dataclass
+class _LaneTask:
+    """One dispatchable unit: run ``fn(cancel_event)`` for split ``key``."""
+    key: int
+    fn: object
+    attempt: int = 0
+    clone: bool = False
+
+
+@dataclasses.dataclass
+class _Lane:
+    """One worker lane: a thread, optionally pinned to a device."""
+    id: int
+    thread: threading.Thread | None = None
+    alive: bool = True
+    declared_dead: bool = False     # liveness machine gave up on it
+    last_beat: float = 0.0
+    n_tasks: int = 0
+    busy_s: float = 0.0
+    dead_reason: str = ""
+
+
+class LanePool:
+    """Concurrent split lanes with first-finisher-wins speculative cloning —
+    the scheduler that turns ``ft.SpeculativePolicy`` from advisory into
+    executed (Hadoop's speculative task re-execution, for real).
+
+    ``n_lanes`` worker threads pull ``_LaneTask``s off one priority queue
+    (clones outrank fresh work — a speculation that queues behind the
+    backlog can never win). Per key, the FIRST attempt to finish commits —
+    its payload lands in ``results`` and the pool's ``on_commit`` hook runs
+    under the lock — and every other in-flight attempt for that key is
+    cancelled via its ``threading.Event`` (task fns poll it between stages;
+    chaos-injected stalls poll it mid-sleep), so the loser unwinds and its
+    buffers die with the frame. Commutative merge contracts make the result
+    bit-identical whichever attempt wins.
+
+    Failure ladder, per task:
+
+    - ``RETRYABLE`` (transient fetch errors): re-dispatched with bounded
+      exponential backoff, up to ``max_retries``; the budget's last failure
+      becomes the run's fatal error.
+    - ``LaneDeath``: the lane marks itself dead, requeues the task onto the
+      surviving lanes at clone priority, and its thread exits — the pool
+      *shrinks* instead of hanging.
+    - anything else: fatal; ``drain`` raises it.
+
+    ``drain`` is the control loop (runs on the caller's thread): it feeds
+    lane heartbeats into an ``ft.Coordinator`` — the SAME heartbeat ->
+    degraded -> remesh state machine the training launcher uses — and
+    executes its verdicts (remesh = declare stuck lanes dead, cancel and
+    requeue their work; abort = every lane is gone), enforces the per-job
+    ``deadline_s``, and drives the speculation policy: per tick it reports
+    ``running(split, elapsed)`` for in-flight splits and executes
+    ``propose()``'s verdict by cloning the slow split onto a free lane.
+
+    Context manager: exit joins every lane thread and (on a clean exit)
+    raises if any survived the join — the no-leaked-threads guarantee that
+    pairs with ``Prefetcher.stop``'s stuck-fetch error.
+    """
+
+    def __init__(self, n_lanes: int, *, policy: SpeculativePolicy | None = None,
+                 chaos=None, max_retries: int = 2, backoff_s: float = 0.02,
+                 deadline_s: float | None = None, devices=None,
+                 liveness_cfg: CoordinatorConfig | None = None,
+                 stuck_after_s: float | None = None, on_commit=None,
+                 join_timeout_s: float = 30.0, name: str = "lane"):
+        assert n_lanes >= 1
+        self.n_lanes = int(n_lanes)
+        self.policy = policy
+        self.chaos = chaos
+        self.max_retries = int(max_retries)
+        self.backoff_s = float(backoff_s)
+        self.deadline_s = deadline_s
+        self.devices = list(devices) if devices else None
+        self.stuck_after_s = stuck_after_s
+        self.on_commit = on_commit
+        self.join_timeout_s = float(join_timeout_s)
+        self._clock = time.perf_counter
+        self._q: queue.PriorityQueue = queue.PriorityQueue()
+        self._seq = itertools.count()
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._fatal: BaseException | None = None
+        self._inflight: dict[int, dict] = {}        # id(task) -> record
+        self._by_key: dict[int, list] = {}
+        self.submitted: set[int] = set()
+        self.results: dict[int, object] = {}
+        self.meta: dict[int, dict] = {}             # key -> winning attempt info
+        self.retries = 0
+        self.speculated = 0
+        self.clone_wins = 0
+        self.cancelled = 0
+        self.dup_drops = 0
+        self.lane_deaths = 0
+        self.remeshes: list[dict] = []
+        self.liveness = Coordinator(
+            list(range(self.n_lanes)),
+            liveness_cfg or CoordinatorConfig(heartbeat_timeout=0.05,
+                                              misses_to_degrade=2,
+                                              misses_to_dead=4, min_hosts=1))
+        now = self._clock()
+        self.lanes = [_Lane(i, last_beat=now) for i in range(self.n_lanes)]
+        for lane in self.lanes:
+            lane.thread = threading.Thread(
+                target=self._worker, args=(lane,),
+                name=f"{name}-{lane.id}", daemon=True)
+            lane.thread.start()
+
+    # -- submission / results ------------------------------------------------
+
+    @property
+    def width(self) -> int:
+        """Lanes still alive (the pool shrinks on lane death)."""
+        return sum(lane.alive for lane in self.lanes)
+
+    def submit(self, key: int, fn, *, clone: bool = False):
+        with self._lock:
+            self._submit_locked(_LaneTask(int(key), fn, clone=clone))
+
+    def _submit_locked(self, task: _LaneTask):
+        self.submitted.add(task.key)
+        # clones and re-dispatches jump the queue: priority 0 beats 1
+        self._q.put((0 if (task.clone or task.attempt) else 1,
+                     next(self._seq), task))
+
+    # -- the worker lanes ----------------------------------------------------
+
+    def _lane_ctx(self, lane: _Lane):
+        """Per-device lanes: pin this lane's computations (and implicit
+        ``device_put`` targets) to its own device when a device list was
+        given — concurrent splits then run on distinct devices, the
+        mesh-as-lanes execution model."""
+        if self.devices:
+            return jax.default_device(self.devices[lane.id % len(self.devices)])
+        return contextlib.nullcontext()
+
+    def _worker(self, lane: _Lane):
+        with self._lane_ctx(lane):
+            while not self._stop.is_set():
+                try:
+                    _, _, task = self._q.get(timeout=0.01)
+                except queue.Empty:
+                    lane.last_beat = self._clock()
+                    continue
+                with self._lock:
+                    if task.key in self.results or self._fatal is not None:
+                        continue            # stale: this split already won
+                    cancel = threading.Event()
+                    rec = {"task": task, "lane": lane.id,
+                           "t0": self._clock(), "cancel": cancel}
+                    self._inflight[id(task)] = rec
+                    self._by_key.setdefault(task.key, []).append(rec)
+                lane.n_tasks += 1
+                t0 = self._clock()
+                requeue = None
+                dead = False
+                try:
+                    if self.chaos is not None:
+                        self.chaos.on_task_start(lane.id, task.key,
+                                                 task.attempt, cancel)
+                    out = task.fn(cancel)
+                except (LaneCancelled, CancelledFetch):
+                    with self._lock:
+                        self.cancelled += 1
+                except LaneDeath as e:
+                    with self._lock:
+                        lane.alive = False
+                        lane.dead_reason = str(e)
+                        self.lane_deaths += 1
+                        # the dying lane's split must not be lost: requeue a
+                        # fresh copy onto the survivors at clone priority
+                        self._submit_locked(dataclasses.replace(task))
+                    dead = True
+                except RETRYABLE as e:
+                    if task.attempt >= self.max_retries:
+                        with self._lock:
+                            if self._fatal is None:
+                                self._fatal = e
+                    else:
+                        requeue = dataclasses.replace(task,
+                                                      attempt=task.attempt + 1)
+                except BaseException as e:
+                    with self._lock:
+                        if self._fatal is None:
+                            self._fatal = e
+                else:
+                    self._commit(task, out, self._clock() - t0, lane)
+                finally:
+                    with self._lock:
+                        self._inflight.pop(id(task), None)
+                        self._by_key.get(task.key, [])[:] = [
+                            r for r in self._by_key.get(task.key, ())
+                            if r["task"] is not task]
+                    lane.busy_s += self._clock() - t0
+                    lane.last_beat = self._clock()
+                if dead:
+                    return
+                if requeue is not None:
+                    # bounded exponential backoff, interruptible on shutdown
+                    self._stop.wait(self.backoff_s * (2 ** task.attempt))
+                    with self._lock:
+                        self.retries += 1
+                        self._submit_locked(requeue)
+
+    def _commit(self, task: _LaneTask, out, wall_s: float, lane: _Lane):
+        with self._lock:
+            if task.key in self.results:
+                self.dup_drops += 1     # lost the race; buffers die here
+                return
+            meta = {"lane": lane.id, "attempt": task.attempt,
+                    "clone": task.clone, "wall_s": wall_s}
+            self.results[task.key] = out
+            self.meta[task.key] = meta
+            if task.clone:
+                self.clone_wins += 1
+            for rec in self._by_key.get(task.key, ()):
+                if rec["task"] is not task:
+                    rec["cancel"].set()         # losers: unwind between stages
+            if self.policy is not None:
+                self.policy.finished(task.key, wall_s)
+            if self.on_commit is not None:
+                self.on_commit(task.key, out, meta)
+
+    # -- the control loop: liveness, deadline, speculation -------------------
+
+    def drain(self, keys=None, *, make_task_fn=None, tick_s: float = 0.002):
+        """Block until every key has committed (default: everything
+        submitted). Runs the lane-liveness state machine, the per-job
+        deadline, and the speculation policy; raises the first fatal error,
+        ``JobDeadlineExceeded``, or abort (all lanes dead)."""
+        t_start = self._clock()
+        while True:
+            with self._lock:
+                want = set(self.submitted if keys is None else keys)
+                fatal = self._fatal
+                done = want <= self.results.keys()
+            if fatal is not None:
+                raise fatal
+            if done:
+                return
+            now = self._clock()
+            if (self.deadline_s is not None
+                    and now - t_start > self.deadline_s):
+                missing = sorted(want - set(self.results))
+                raise JobDeadlineExceeded(
+                    f"job deadline {self.deadline_s}s exceeded with splits "
+                    f"{missing} uncommitted ({self.width}/{self.n_lanes} "
+                    f"lanes alive)")
+            self._liveness_tick(now)
+            self._speculate(now, make_task_fn)
+            time.sleep(tick_s)
+
+    def _liveness_tick(self, now: float):
+        coord = self.liveness
+        with self._lock:
+            for lane in self.lanes:
+                beating = lane.alive and (
+                    self.stuck_after_s is None
+                    or now - lane.last_beat <= self.stuck_after_s)
+                if beating:
+                    coord.heartbeat(lane.id, now)
+            act = coord.tick(now)
+            if act["action"] == "remesh":
+                for lid in act["dead"]:
+                    lane = self.lanes[lid]
+                    lane.declared_dead = True
+                    if lane.alive:
+                        # stuck, not self-reported: give up on it — cancel
+                        # its in-flight work and requeue fresh copies
+                        lane.alive = False
+                        lane.dead_reason = (lane.dead_reason
+                                            or "no heartbeat (stuck)")
+                        for rec in list(self._inflight.values()):
+                            if rec["lane"] == lid:
+                                rec["cancel"].set()
+                                self._submit_locked(
+                                    dataclasses.replace(rec["task"]))
+                self.remeshes.append(act)
+                coord.remesh_done()
+            elif act["action"] == "abort":
+                if self._fatal is None:
+                    self._fatal = RuntimeError(
+                        "every lane is dead: "
+                        + "; ".join(f"lane {ln.id}: {ln.dead_reason}"
+                                    for ln in self.lanes if not ln.alive))
+
+    def _speculate(self, now: float, make_task_fn):
+        if self.policy is None:
+            return
+        with self._lock:
+            earliest: dict[int, float] = {}
+            for rec in self._inflight.values():
+                k = rec["task"].key
+                earliest[k] = min(earliest.get(k, rec["t0"]), rec["t0"])
+            for k, t0 in earliest.items():
+                if k not in self.results:
+                    self.policy.running(k, now - t0)
+            verdict = self.policy.propose()
+            if verdict["action"] == "speculate" and make_task_fn is not None:
+                k = verdict["split"]
+                self.speculated += 1
+                self._submit_locked(_LaneTask(k, make_task_fn(k), clone=True))
+
+    # -- shutdown ------------------------------------------------------------
+
+    def shutdown(self, *, check: bool = True):
+        self._stop.set()
+        with self._lock:
+            for rec in self._inflight.values():
+                rec["cancel"].set()
+        leaked = []
+        for lane in self.lanes:
+            if lane.thread is not None:
+                lane.thread.join(timeout=self.join_timeout_s)
+                if lane.thread.is_alive():
+                    leaked.append(lane.id)
+        if leaked and check:
+            raise RuntimeError(
+                f"LanePool shutdown leaked lane thread(s) {leaked}: still "
+                f"running {self.join_timeout_s}s after stop — a task is "
+                f"ignoring its cancel event")
+
+    def __enter__(self) -> "LanePool":
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        # on the error path, still stop + join but don't let a leak report
+        # mask the original failure
+        self.shutdown(check=exc_type is None)
+
+
+# ---------------------------------------------------------------------------
 # The streaming executor
 # ---------------------------------------------------------------------------
 
+def _resolve_policy(speculate) -> SpeculativePolicy | None:
+    """None/False -> off; True -> default policy; a ``SpeculativeConfig``
+    or ``SpeculativePolicy`` -> that policy."""
+    if not speculate:
+        return None
+    if isinstance(speculate, SpeculativePolicy):
+        return speculate
+    if speculate is True:
+        return SpeculativePolicy()
+    return SpeculativePolicy(speculate)      # a SpeculativeConfig
+
+
 def run_jobs_streaming(jobs, source: SplitSource, *, mesh=None,
                        engine: str = "auto", combiner="auto",
-                       prefetch: int = 2,
-                       straggler_monitor=None) -> list[JobResult]:
+                       prefetch: int = 2, straggler_monitor=None,
+                       n_lanes: int = 1, speculate=None, chaos=None,
+                       max_retries: int = 0, retry_backoff_s: float = 0.05,
+                       deadline_s: float | None = None) -> list[JobResult]:
     """Stream every split of ``source`` through map -> combine -> shuffle ->
     reduce and return one ``JobResult`` per job (all sharing one
     ``StageStats`` with per-split records).
@@ -205,6 +587,25 @@ def run_jobs_streaming(jobs, source: SplitSource, *, mesh=None,
       (``ft.SpeculativePolicy``).
     - ``mesh`` composes: per-split (or final) reduces run psum-sharded over
       the ``data`` axis; cross-split combine sees the replicated partial.
+
+    Lane execution (any of the following engages the ``LanePool`` path;
+    the default is the sequential prefetched pipeline above):
+
+    - ``n_lanes > 1``: splits dispatch concurrently over worker lanes —
+      pinned one-per-device when several devices exist and no ``mesh`` is
+      given (the mesh-as-lanes model: different splits on different
+      devices, Hadoop's actual parallelism), else concurrent dispatch
+      streams on one device.
+    - ``speculate``: True / ``SpeculativeConfig`` / ``SpeculativePolicy`` —
+      the policy's verdicts are EXECUTED: a slow split is cloned onto a
+      free lane, first finisher wins, the loser is cancelled between
+      stages. Bit-identical results either way (commutative merges).
+    - ``chaos`` (``ft.LaneChaos``): injected lane deaths/delays; a dead
+      lane's work requeues onto the survivors and the pool shrinks.
+    - ``max_retries`` / ``retry_backoff_s``: per-split transient-fault
+      retry budget with bounded exponential backoff.
+    - ``deadline_s``: per-job deadline — ``JobDeadlineExceeded`` instead of
+      a hang when splits cannot finish.
 
     The partition space must be split-independent (``n_partitions`` is read
     from the first split) — true for the stock zone/hash partitioners.
@@ -226,6 +627,15 @@ def run_jobs_streaming(jobs, source: SplitSource, *, mesh=None,
     stats = StageStats(job="+".join(j.name for j in jobs), engine=engine,
                        codec=codec.name, n_splits=K,
                        combiner=comb.name if comb else "")
+    policy = _resolve_policy(speculate)
+    if (n_lanes > 1 or policy is not None or chaos is not None
+            or max_retries > 0 or deadline_s is not None):
+        return _run_jobs_lanes(
+            jobs, source, mesh=mesh, device=device, codec=codec, part=part,
+            comb=comb, K=K, stats=stats, straggler_monitor=straggler_monitor,
+            n_lanes=max(1, int(n_lanes)), policy=policy, chaos=chaos,
+            max_retries=max_retries, retry_backoff_s=retry_backoff_s,
+            deadline_s=deadline_s)
 
     def fetch(k):
         # -> (items, raw_rows, raw_bytes): the RAW split size is carried
@@ -349,10 +759,174 @@ def run_jobs_streaming(jobs, source: SplitSource, *, mesh=None,
             for j, t in zip(jobs, totals)]
 
 
+def _fence_mapped(m):
+    """Block until one ``MappedSplit``'s arrays are materialized, so a lane's
+    reported wall covers real device work, not dispatch."""
+    jax.block_until_ready([m.payloads, m.keys, m.dest_eff, m.src]
+                          + ([m.skey] if m.skey is not None else []))
+    return m
+
+
+def _run_jobs_lanes(jobs, source, *, mesh, device, codec, part, comb, K,
+                    stats, straggler_monitor, n_lanes, policy, chaos,
+                    max_retries, retry_backoff_s, deadline_s):
+    """The ``LanePool`` execution path of ``run_jobs_streaming``: splits run
+    concurrently, each lane's stages fill a PRIVATE ``StageStats`` that
+    merges into the shared one at commit (under the pool lock, so the
+    stage-wall accumulation the sequential path does in-place stays
+    race-free), and only the FIRST committed attempt per split contributes —
+    a cancelled speculation loser's partial work is dropped with its frame.
+    Commit order is nondeterministic; every cross-split merge is commutative
+    (integer-sum accumulators / multiset bucket contents), which is exactly
+    the contract that makes the results bit-identical to the sequential and
+    monolithic paths."""
+    t_run0 = time.perf_counter()
+    devices = None
+    if device and mesh is None:
+        devs = jax.devices()
+        if len(devs) > 1:
+            devices = devs        # per-device lanes (lane i -> device i % D)
+
+    agg = _Agg()
+    mapped: dict[int, object] = {}
+    host_items: dict[int, np.ndarray] = {}
+    recs: list[dict] = []
+    state = {"acc": None, "P": None, "raw_items": 0, "raw_bytes": 0}
+
+    def fetch(k, cancel):
+        if hasattr(source, "split_cancellable"):
+            s = source.split_cancellable(k, cancel)
+        else:
+            s = source.split(k)
+        raw_rows, raw_bytes = len(s), int(np.asarray(s).nbytes)
+        if comb is not None:
+            s = comb.precombine(s)
+        return s, raw_rows, raw_bytes
+
+    def make_task(k):
+        def fn(cancel):
+            local = StageStats()
+            t0 = time.perf_counter()
+            s, raw_rows, raw_bytes = fetch(k, cancel)
+            local.fetch_wall_s = time.perf_counter() - t0
+            if cancel.is_set():
+                raise LaneCancelled(k)
+            P_k = int(part.n_partitions(s))
+            if device:
+                items_k = jax.device_put(np.ascontiguousarray(
+                    np.asarray(s, np.float32)))
+                t0 = time.perf_counter()
+                m = map_split_device(part, codec, items_k, P_k)
+                local.map_wall_s += time.perf_counter() - t0
+                if cancel.is_set():
+                    raise LaneCancelled(k)
+                if comb is None:
+                    payload = ("mapped", _fence_mapped(m))
+                else:
+                    totals, sd, sp, sr = shuffle_reduce_device(
+                        jobs, m, P_k, local, mesh)
+                    payload = ("acc", jax.block_until_ready(totals),
+                               sd, sp, sr)
+            else:
+                items_h = np.asarray(s)
+                if comb is None:
+                    payload = ("items", items_h)
+                else:
+                    totals, sd, sp, sr = host_shuffle_reduce(
+                        jobs, items_h, local, mesh)
+                    payload = ("acc", totals, sd, sp, sr)
+            if cancel.is_set():
+                raise LaneCancelled(k)
+            return {"payload": payload, "P": P_k, "raw_rows": raw_rows,
+                    "raw_bytes": raw_bytes, "local": local}
+        return fn
+
+    def on_commit(k, out, meta):
+        # runs under the pool lock: the one winning attempt per split merges
+        # its private stats + partials into the shared state, serialized
+        local = out["local"]
+        stats.merge_from(local)
+        state["raw_items"] += out["raw_rows"]
+        state["raw_bytes"] += out["raw_bytes"]
+        if state["P"] is None:
+            state["P"] = out["P"]
+        kind, *rest = out["payload"]
+        if kind == "acc":
+            totals, sd, sp, sr = rest
+            agg.add(sd, sp, sr)
+            t0 = time.perf_counter()
+            state["acc"] = comb.combine(state["acc"], totals)
+            stats.combine_wall_s += time.perf_counter() - t0
+        elif kind == "mapped":
+            mapped[k] = rest[0]
+        else:
+            host_items[k] = rest[0]
+        recs.append({"split": k, "n_items": out["raw_rows"],
+                     "fetch_wait_s": local.fetch_wall_s,
+                     "fetch_prep_s": local.fetch_wall_s,
+                     "map_s": local.map_wall_s,
+                     "shuffle_s": local.shuffle_wall_s,
+                     "reduce_s": local.reduce_wall_s,
+                     "wall_s": meta["wall_s"], "lane": meta["lane"],
+                     "attempt": meta["attempt"], "clone": meta["clone"]})
+        if straggler_monitor is not None and straggler_monitor is not policy:
+            straggler_monitor.record(k, meta["wall_s"])
+
+    with LanePool(n_lanes, policy=policy, chaos=chaos,
+                  max_retries=max_retries, backoff_s=retry_backoff_s,
+                  deadline_s=deadline_s, devices=devices,
+                  on_commit=on_commit) as pool:
+        for k in range(K):
+            pool.submit(k, make_task(k))
+        pool.drain(range(K), make_task_fn=make_task)
+        stats.n_lanes = n_lanes
+        stats.speculated = pool.speculated
+        stats.clone_wins = pool.clone_wins
+        stats.retries = pool.retries
+        stats.lane_walls = tuple(round(ln.busy_s, 6) for ln in pool.lanes)
+    assert len(recs) == K, (len(recs), K)
+
+    P = state["P"]
+    if comb is None:
+        # one global shuffle+reduce over the accumulated per-split streams,
+        # concatenated in split order (deterministic regardless of commit
+        # order — and bit-identical to any order by the multiset contract)
+        if device:
+            totals, sd, sp, sr = shuffle_reduce_device(
+                jobs, concat_mapped([mapped[k] for k in range(K)]), P, stats,
+                mesh)
+        else:
+            hs = [host_items[k] for k in range(K)]
+            items_all = hs[0] if len(hs) == 1 else np.concatenate(hs, axis=0)
+            totals, sd, sp, sr = host_shuffle_reduce(jobs, items_all, stats,
+                                                     mesh)
+        agg.add(sd, sp, sr)
+        summary = sd
+    else:
+        t0 = time.perf_counter()
+        totals = jax.block_until_ready(state["acc"])
+        stats.combine_wall_s += time.perf_counter() - t0
+        summary = agg.summary()
+    agg.finish(stats)
+    stats.n_items = state["raw_items"]
+    stats.map_bytes = state["raw_bytes"]
+    stats.splits = tuple(sorted(recs, key=lambda r: r["split"]))
+    stats.elapsed_s = time.perf_counter() - t_run0
+    return [JobResult(j.reducer.finalize(t, summary), stats)
+            for j, t in zip(jobs, totals)]
+
+
 def run_job_streaming(job, source: SplitSource, *, mesh=None,
                       engine: str = "auto", combiner="auto",
-                      prefetch: int = 2, straggler_monitor=None) -> JobResult:
+                      prefetch: int = 2, straggler_monitor=None,
+                      n_lanes: int = 1, speculate=None, chaos=None,
+                      max_retries: int = 0, retry_backoff_s: float = 0.05,
+                      deadline_s: float | None = None) -> JobResult:
     """Stream one job over a ``SplitSource``. -> JobResult(output, stats)."""
     return run_jobs_streaming([job], source, mesh=mesh, engine=engine,
                               combiner=combiner, prefetch=prefetch,
-                              straggler_monitor=straggler_monitor)[0]
+                              straggler_monitor=straggler_monitor,
+                              n_lanes=n_lanes, speculate=speculate,
+                              chaos=chaos, max_retries=max_retries,
+                              retry_backoff_s=retry_backoff_s,
+                              deadline_s=deadline_s)[0]

@@ -65,11 +65,49 @@ class StageStats:
     combine_wall_s: float = 0.0        # cross-split combine of partials
     overlap_hidden_s: float = 0.0      # prefetch work hidden under compute
     splits: tuple = ()                 # per-split record dicts (see executor)
+    # lane execution (concurrent splits + speculative re-execution): with
+    # n_lanes > 1 the per-stage walls above are SUMS over lanes that ran
+    # concurrently, so ``elapsed_s`` carries the true end-to-end wall
+    n_lanes: int = 1
+    elapsed_s: float = 0.0             # measured end-to-end wall (0 = wall_s)
+    speculated: int = 0                # clone dispatches the policy triggered
+    clone_wins: int = 0                # splits where the clone finished first
+    retries: int = 0                   # transient-fault re-dispatches
+    lane_walls: tuple = ()             # per-lane busy seconds, length n_lanes
+
+    # per-stage accumulator fields that add across per-split / per-lane
+    # partial StageStats when lanes merge their local stats into the shared one
+    _ACCUM_FIELDS = ("n_items", "map_wall_s", "map_bytes", "shuffle_wall_s",
+                     "shuffle_wire_bytes", "shuffle_raw_bytes",
+                     "reduce_wall_s", "reduce_flops", "reduce_bytes",
+                     "fetch_wall_s", "combine_wall_s", "overlap_hidden_s",
+                     "speculated", "clone_wins", "retries")
+
+    def merge_from(self, other: "StageStats") -> "StageStats":
+        """Fold a per-split/per-lane partial ``StageStats`` into this one:
+        accumulator fields add; identity fields (codec, engine, partition
+        geometry, index impl) adopt the partial's value when unset here.
+        Lanes each fill a private partial and commit it under the pool lock,
+        so concurrent lanes never mutate the shared stats mid-stage."""
+        for f in self._ACCUM_FIELDS:
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        for f in ("n_partitions", "n_shards", "shuffle_index_impl"):
+            mine = getattr(self, f)
+            if mine in (0, 1, ""):
+                setattr(self, f, getattr(other, f))
+        return self
 
     @property
     def wall_s(self) -> float:
         return (self.map_wall_s + self.shuffle_wall_s + self.reduce_wall_s
                 + self.fetch_wall_s + self.combine_wall_s)
+
+    @property
+    def run_wall_s(self) -> float:
+        """The run's true end-to-end wall: the measured elapsed time when
+        lanes ran splits concurrently (stage walls then sum ACROSS lanes and
+        over-count), else the stage-wall sum."""
+        return self.elapsed_s if self.elapsed_s > 0 else self.wall_s
 
     @property
     def overlap_fraction(self) -> float:

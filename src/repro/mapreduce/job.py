@@ -916,6 +916,13 @@ def shuffle_reduce_device(jobs, m: MappedSplit, P: int, stats: StageStats,
     split; ratio-style fields (``reduce_padded_ratio``/``shard_padded_ratio``)
     are left to the caller, which receives the per-call padded/real cell
     vectors. -> (per-job totals, DeviceShuffledData, shard_pad, shard_real).
+
+    Lane-safety: this call (and ``host_shuffle_reduce``/``map_split_device``)
+    keeps NO shared mutable state beyond ``stats`` — the module-level
+    jit/shard_map caches are ``lru_cache`` (thread-safe) and everything else
+    is local — so concurrent lanes (``executor.LanePool``) may run it on
+    independent splits simultaneously, each passing its own private
+    ``StageStats`` and merging at commit.
     """
     j0 = jobs[0]
     cat = _shuffle_mapped(j0.partitioner, get_codec(j0.codec), j0.tile,

@@ -103,11 +103,14 @@ class MRQueryService:
 
     def __init__(self, *, mesh=None, max_batch: int = 16,
                  max_wait_s: float = 0.002, straggler_monitor=None,
+                 n_lanes: int = 1, lane_chaos=None,
                  clock=time.perf_counter):
         self.mesh = mesh
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_s)
         self.straggler_monitor = straggler_monitor
+        self.n_lanes = int(n_lanes)
+        self.lane_chaos = lane_chaos
         self.clock = clock
         self.catalogs: dict[str, ResidentCatalog] = {}
         self.request_stats: list[RequestStats] = []
@@ -115,8 +118,11 @@ class MRQueryService:
         self.closed = False
         self._queue: deque[MRRequest] = deque()
         self._cond = threading.Condition()
+        self._blk = threading.Lock()        # batches/request_stats bookkeeping
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
+        self._pool = None                   # LanePool when n_lanes > 1
+        self._nbatch = 0                    # lane-pool batch keys
         self._rid = 0
 
     # -- catalog management -------------------------------------------------
@@ -192,9 +198,16 @@ class MRQueryService:
     def _run_batch(self, batch: list[MRRequest]) -> None:
         """Serve one admitted micro-batch: group by catalog, coalesce
         duplicate jobs, one fused batched reduce per catalog group, then
-        stamp RequestStats / wake waiters / feed the straggler hook."""
+        stamp RequestStats / wake waiters / feed the straggler hook.
+
+        Failure isolation: dedupe maps many requests onto one fused
+        ``cat.run``, so a single poison job used to surface its error
+        through EVERY waiter in the group. Now a failed fused pass falls
+        back to running each distinct job alone — only the requests mapped
+        to the actually-failing job see its error; batch-mates are served.
+        Bookkeeping appends under a lock so lane-concurrent batches can't
+        interleave records."""
         t_admit = self.clock()
-        bidx = len(self.batches)
         by_cat: dict[str, list[MRRequest]] = {}
         for r in batch:
             by_cat.setdefault(r.catalog, []).append(r)
@@ -215,24 +228,39 @@ class MRQueryService:
             n_unique += len(uniq_jobs)
             try:
                 results = cat.run(uniq_jobs)
-                for r, s in zip(reqs, slots):
-                    r.output = results[s].output
-            except BaseException as e:   # surface through every waiter
-                for r in reqs:
-                    r.error = e
+                outs = [(res.output, None) for res in results]
+            except BaseException:
+                # the fused pass died: isolate per distinct job so one
+                # poison query cannot fail its coalesced batch-mates
+                outs = []
+                for job in uniq_jobs:
+                    try:
+                        outs.append((cat.run([job])[0].output, None))
+                    except BaseException as e:
+                        outs.append((None, e))
+            for r, s in zip(reqs, slots):
+                out, err = outs[s]
+                if err is None:
+                    r.output = out
+                else:
+                    r.error = err
         t_done = self.clock()
         wall = t_done - t_admit
-        self.batches.append({"batch": bidx, "size": len(batch),
-                             "n_unique": n_unique, "wall_s": wall})
-        if self.straggler_monitor is not None:
-            self.straggler_monitor.record(bidx, wall)
+        with self._blk:
+            bidx = len(self.batches)
+            self.batches.append({"batch": bidx, "size": len(batch),
+                                 "n_unique": n_unique, "wall_s": wall})
+            if self.straggler_monitor is not None:
+                self.straggler_monitor.record(bidx, wall)
+            for r in batch:
+                r.stats = RequestStats(
+                    rid=r.rid, job=r.job.name, catalog=r.catalog,
+                    batch_index=bidx, batch_size=len(batch),
+                    n_unique=n_unique, t_submit_s=r.t_submit,
+                    queue_wait_s=t_admit - r.t_submit,
+                    batch_wall_s=wall, latency_s=t_done - r.t_submit)
+                self.request_stats.append(r.stats)
         for r in batch:
-            r.stats = RequestStats(
-                rid=r.rid, job=r.job.name, catalog=r.catalog,
-                batch_index=bidx, batch_size=len(batch), n_unique=n_unique,
-                t_submit_s=r.t_submit, queue_wait_s=t_admit - r.t_submit,
-                batch_wall_s=wall, latency_s=t_done - r.t_submit)
-            self.request_stats.append(r.stats)
             r._done.set()
 
     # -- execution: synchronous drain or background serving thread ----------
@@ -256,18 +284,33 @@ class MRQueryService:
         return served
 
     def _serve_loop(self) -> None:
+        """Admission loop. With a lane pool, admitted micro-batches are
+        SUBMITTED and run concurrently across lanes (they no longer queue
+        behind one stream); a lane death shrinks the pool and requeues the
+        batch onto the survivors instead of killing the service."""
         while True:
             batch = self._admit()
             if batch:
-                self._run_batch(batch)
+                if self._pool is not None:
+                    key, self._nbatch = self._nbatch, self._nbatch + 1
+                    self._pool.submit(
+                        key, (lambda b: lambda cancel: self._run_batch(b))(
+                            batch))
+                else:
+                    self._run_batch(batch)
             elif self._stop.is_set():
                 return
 
     def start(self) -> "MRQueryService":
-        """Start the background admission/serving thread (idempotent)."""
+        """Start the background admission/serving thread (idempotent); with
+        ``n_lanes > 1`` also start the concurrent-batch lane pool."""
         if self.closed:
             raise RuntimeError("MRQueryService is closed")
         if self._thread is None:
+            if self.n_lanes > 1 and self._pool is None:
+                from repro.mapreduce.executor import LanePool
+                self._pool = LanePool(self.n_lanes, chaos=self.lane_chaos,
+                                      max_retries=0, name="mr-batch")
             self._stop.clear()
             self._thread = threading.Thread(target=self._serve_loop,
                                             name="mr-service", daemon=True)
@@ -276,7 +319,8 @@ class MRQueryService:
 
     def close(self) -> None:
         """Reject further submits, serve everything already queued, and
-        stop the worker. Idempotent; also the context-manager exit."""
+        stop the worker (and the lane pool, asserting its threads joined).
+        Idempotent; also the context-manager exit."""
         with self._cond:
             self.closed = True
             self._stop.set()
@@ -285,6 +329,12 @@ class MRQueryService:
             self._thread.join(timeout=60.0)
             self._thread = None
         self.run_pending()               # anything the worker left behind
+        if self._pool is not None:
+            pool, self._pool = self._pool, None
+            try:
+                pool.drain()             # in-flight lane batches finish
+            finally:
+                pool.shutdown()          # raises on leaked lane threads
 
     def __enter__(self) -> "MRQueryService":
         return self.start()

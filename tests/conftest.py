@@ -14,6 +14,52 @@ jax.config.update("jax_persistent_cache_min_compile_time_secs", 1.0)
 
 import pytest  # noqa: E402
 
+# ---------------------------------------------------------------------------
+# Per-test timeout guard (hand-rolled: pytest-timeout is not a dependency).
+# A deadlocked lane/pool/service thread must FAIL the test quickly instead of
+# hanging the whole suite/CI until the job-level timeout. SIGALRM fires on
+# the main thread, so even a test blocked on a lock/join raises. Default is
+# generous (the md_check subprocess tests legitimately run for minutes);
+# chaos tests tighten it per-test with @pytest.mark.timeout_s(N).
+# ---------------------------------------------------------------------------
+import signal      # noqa: E402
+import threading   # noqa: E402
+
+DEFAULT_TEST_TIMEOUT_S = int(os.environ.get("PYTEST_PER_TEST_TIMEOUT_S",
+                                            "1200"))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "timeout_s(seconds): per-test SIGALRM deadline (default "
+        f"{DEFAULT_TEST_TIMEOUT_S}s; deadlocked threads fail fast)")
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    mark = item.get_closest_marker("timeout_s")
+    limit = int(mark.args[0]) if mark and mark.args else DEFAULT_TEST_TIMEOUT_S
+    usable = (hasattr(signal, "SIGALRM")
+              and threading.current_thread() is threading.main_thread()
+              and limit > 0)
+    if not usable:
+        yield
+        return
+
+    def on_alarm(signum, frame):
+        raise TimeoutError(
+            f"{item.nodeid} exceeded its {limit}s timeout guard — "
+            f"a lane/pool/service thread is likely deadlocked")
+
+    old = signal.signal(signal.SIGALRM, on_alarm)
+    signal.alarm(limit)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+
 
 @pytest.fixture(scope="session")
 def cpu_mesh():

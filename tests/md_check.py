@@ -396,6 +396,49 @@ def check_mapreduce_service_sharded():
     print("mapreduce service on 8-shard mesh == per-query mesh/host OK")
 
 
+def check_mapreduce_lanes_sharded():
+    """Concurrent split lanes across 8 host devices: with no mesh, each
+    lane pins its worker to devices[lane % n_devices] so independent splits
+    map/shuffle/reduce on different devices concurrently — results must be
+    bit-identical to the monolithic single-device run, with injected chaos
+    (seeded delays + transient faults + speculation) and without."""
+    from repro.data import ArraySplits, sky
+    from repro.ft import FaultySplitSource, SpeculativeConfig
+    from repro.mapreduce import (ZonePartitioner, neighbor_search_job,
+                                 run_job, run_job_streaming,
+                                 token_histogram_job)
+
+    assert len(jax.devices()) == 8
+    radius = 0.09
+    part = ZonePartitioner(radius)
+    job = neighbor_search_job(radius, partitioner=part, codec="int16",
+                              tile=64)
+    xyz = sky.make_catalog(900, 5)
+    want = run_job(job, xyz).output
+
+    # plain per-device lanes, one lane per host device
+    res = run_job_streaming(job, ArraySplits(xyz, 8), n_lanes=8)
+    assert res.output == want
+    assert res.stats.n_lanes == 8 and len(res.stats.lane_walls) == 8
+
+    # chaos on top: seeded delays + transient faults + speculation
+    src = FaultySplitSource(ArraySplits(xyz, 8), seed=0, delay_p=0.4,
+                            fault_p=0.4, delay_s=0.05, max_faults=2)
+    res2 = run_job_streaming(
+        job, src, n_lanes=8, max_retries=2, retry_backoff_s=0.01,
+        speculate=SpeculativeConfig(slowdown=2.0, min_finished=2))
+    assert res2.output == want
+
+    # wordcount combine mode across lanes (order-free monoid merge)
+    toks = np.random.default_rng(2).integers(0, 300, 6000)
+    items = toks.astype(np.float32).reshape(-1, 1)
+    wjob = token_histogram_job(300, n_partitions=16, tile=64)
+    wres = run_job_streaming(wjob, ArraySplits(items, 8), n_lanes=8)
+    np.testing.assert_array_equal(wres.output,
+                                  np.bincount(toks, minlength=300))
+    print("mapreduce lanes across 8 devices == monolithic OK")
+
+
 if __name__ == "__main__":
     checks = {
         "hier": check_hierarchical_psum,
@@ -407,5 +450,6 @@ if __name__ == "__main__":
         "mapreduce-ragged": check_mapreduce_ragged_shards,
         "mapreduce-streaming": check_mapreduce_streaming_sharded,
         "mapreduce-service": check_mapreduce_service_sharded,
+        "mapreduce-lanes": check_mapreduce_lanes_sharded,
     }
     checks[sys.argv[1]]()

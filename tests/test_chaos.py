@@ -1,0 +1,337 @@
+"""Chaos parity: the lane scheduler under injected faults.
+
+The fault-tolerance claim is only real if recovery is *invisible in the
+results*: streaming==monolithic bit parity must survive concurrent lanes,
+seeded delays, transient fetch faults with retry, speculative clones winning
+AND losing, and lane deaths. Every test here asserts exact equality against
+the monolithic oracle — recovery that changes the answer is a bug, not a
+degraded mode.
+
+Seeded randomized cases read ``CHAOS_SEED`` (the CI seed matrix re-runs this
+file under several seeds); the hypothesis property (skipped when hypothesis
+is not installed — CI installs it) additionally fuzzes lane counts, split
+boundaries, and fault schedules.
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.data import sky
+from repro.data.pipeline import ArraySplits
+from repro.ft import (FaultySplitSource, LaneChaos, SpeculativeConfig,
+                      SpeculativePolicy, TransientSplitError)
+from repro.mapreduce import (JobDeadlineExceeded, LanePool,
+                             neighbor_search_job, run_job, run_job_streaming,
+                             token_histogram_job)
+
+CHAOS_SEED = int(os.environ.get("CHAOS_SEED", "0"))
+
+RADIUS = 0.02
+
+
+def _catalog(n=3000, seed=0):
+    return sky.make_catalog(n, seed=seed)
+
+
+def _tokens(n=4000, vocab=89):
+    return (np.arange(n) % vocab).astype(np.float32).reshape(-1, 1)
+
+
+# ---------------------------------------------------------------------------
+# parity under lanes / faults / speculation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout_s(300)
+@pytest.mark.parametrize("n_lanes", [1, 2, 4])
+def test_lanes_bit_parity_search(n_lanes):
+    """Concurrent lanes == monolithic, accumulate mode (pair search)."""
+    xyz = _catalog()
+    job = neighbor_search_job(RADIUS, tile=128)
+    want = run_job(job, xyz).output
+    res = run_job_streaming(job, ArraySplits(xyz, n_splits=5),
+                            n_lanes=n_lanes)
+    assert res.output == want
+    assert res.stats.n_lanes == n_lanes
+    if n_lanes > 1:        # n_lanes=1 without faults takes the sequential path
+        assert len(res.stats.lane_walls) == n_lanes
+    assert len(res.stats.splits) == 5
+    assert [r["split"] for r in res.stats.splits] == list(range(5))
+
+
+@pytest.mark.timeout_s(300)
+def test_lanes_bit_parity_wordcount_combine():
+    """Concurrent lanes == monolithic, combine mode (token histogram) —
+    commit order is nondeterministic, sums must not care."""
+    toks = _tokens()
+    job = token_histogram_job(89)
+    want = run_job(job, toks).output
+    res = run_job_streaming(job, ArraySplits(toks, n_splits=6), n_lanes=3)
+    assert np.array_equal(res.output, want)
+    assert res.stats.combiner == "token_count"
+
+
+@pytest.mark.timeout_s(300)
+def test_transient_faults_retry_to_parity():
+    """A fetch that fails transiently n times succeeds within a retry
+    budget of n — and the retried run is bit-identical."""
+    xyz = _catalog()
+    job = neighbor_search_job(RADIUS, tile=128)
+    want = run_job(job, xyz).output
+    src = FaultySplitSource(ArraySplits(xyz, n_splits=6),
+                            faults={1: 2, 4: 1})
+    res = run_job_streaming(job, src, n_lanes=2, max_retries=2,
+                            retry_backoff_s=0.01)
+    assert res.output == want
+    assert res.stats.retries == 3
+    assert src.injected_faults == 3
+
+
+@pytest.mark.timeout_s(120)
+def test_retry_budget_exhausted_raises():
+    xyz = _catalog(800)
+    job = neighbor_search_job(RADIUS, tile=128)
+    src = FaultySplitSource(ArraySplits(xyz, n_splits=4), faults={2: 3})
+    with pytest.raises(TransientSplitError):
+        run_job_streaming(job, src, n_lanes=2, max_retries=2,
+                          retry_backoff_s=0.01)
+
+
+@pytest.mark.timeout_s(300)
+def test_speculation_clone_wins_bit_parity():
+    """A 1.5s straggler split gets cloned; the clone's re-fetch is fast and
+    WINS; the stalled original is cancelled — same answer, real recovery."""
+    xyz = _catalog()
+    job = neighbor_search_job(RADIUS, tile=128)
+    want = run_job(job, xyz).output
+    src = FaultySplitSource(ArraySplits(xyz, n_splits=8), delays={0: 1.5})
+    pol = SpeculativePolicy(SpeculativeConfig(slowdown=2.0, min_finished=2,
+                                              max_clones=1))
+    res = run_job_streaming(job, src, n_lanes=2, speculate=pol)
+    st = res.stats
+    assert res.output == want
+    assert st.speculated >= 1 and st.clone_wins >= 1
+    assert st.elapsed_s < 1.5          # did NOT serve out the injected stall
+    winner = st.splits[0]
+    assert winner["split"] == 0 and winner["clone"]
+
+
+@pytest.mark.timeout_s(300)
+def test_speculation_clone_loses_bit_parity():
+    """When the slowness is data-bound (every attempt pays the delay), the
+    earlier-started original wins, the clone is cancelled, and the result
+    is still bit-identical — first-finisher-wins is safe both ways."""
+    xyz = _catalog()
+    job = neighbor_search_job(RADIUS, tile=128)
+    want = run_job(job, xyz).output
+    src = FaultySplitSource(ArraySplits(xyz, n_splits=6),
+                            delays={0: 1.2}, delay_calls={0: 99})
+    pol = SpeculativePolicy(SpeculativeConfig(slowdown=2.0, min_finished=2,
+                                              max_clones=1))
+    res = run_job_streaming(job, src, n_lanes=2, speculate=pol)
+    st = res.stats
+    assert res.output == want
+    assert st.speculated >= 1
+    assert st.clone_wins == 0
+    assert not st.splits[0]["clone"]
+
+
+@pytest.mark.timeout_s(300)
+def test_speculation_on_vs_off_identical():
+    """The acceptance property: identical fault schedule, speculation +
+    retry ON vs OFF, bit-identical outputs (fresh sources so injected
+    fault state doesn't leak between runs)."""
+    xyz = _catalog()
+    toks = _tokens()
+    sjob = neighbor_search_job(RADIUS, tile=128)
+    wjob = token_histogram_job(89)
+
+    def faulty(items):
+        return FaultySplitSource(ArraySplits(items, n_splits=6),
+                                 delays={1: 0.4}, faults={3: 1},
+                                 seed=CHAOS_SEED, fault_p=0.2)
+
+    s_off = run_job_streaming(sjob, faulty(xyz), n_lanes=2, max_retries=3,
+                              retry_backoff_s=0.01)
+    s_on = run_job_streaming(
+        sjob, faulty(xyz), n_lanes=3, max_retries=3, retry_backoff_s=0.01,
+        speculate=SpeculativeConfig(slowdown=2.0, min_finished=2))
+    assert s_on.output == s_off.output == run_job(sjob, xyz).output
+
+    w_off = run_job_streaming(wjob, faulty(toks), n_lanes=2, max_retries=3,
+                              retry_backoff_s=0.01)
+    w_on = run_job_streaming(
+        wjob, faulty(toks), n_lanes=3, max_retries=3, retry_backoff_s=0.01,
+        speculate=SpeculativeConfig(slowdown=2.0, min_finished=2))
+    assert np.array_equal(w_on.output, w_off.output)
+    assert np.array_equal(w_on.output, run_job(wjob, toks).output)
+
+
+@pytest.mark.timeout_s(300)
+def test_lane_death_requeues_and_shrinks():
+    """An injected lane death re-dispatches the lane's split onto the
+    survivors; the run completes with parity and records the death."""
+    xyz = _catalog()
+    job = neighbor_search_job(RADIUS, tile=128)
+    want = run_job(job, xyz).output
+    chaos = LaneChaos(kills=[(0, 1)])
+    res = run_job_streaming(job, ArraySplits(xyz, n_splits=6), n_lanes=3,
+                            chaos=chaos)
+    assert res.output == want
+    assert len(chaos.deaths) == 1
+
+
+@pytest.mark.timeout_s(120)
+def test_deadline_raises_instead_of_hanging():
+    xyz = _catalog(800)
+    job = neighbor_search_job(RADIUS, tile=128)
+    src = FaultySplitSource(ArraySplits(xyz, n_splits=4), delays={0: 30.0})
+    t0 = time.perf_counter()
+    with pytest.raises(JobDeadlineExceeded):
+        run_job_streaming(job, src, n_lanes=2, deadline_s=0.5)
+    assert time.perf_counter() - t0 < 10.0   # cancelled, not served out
+
+
+# ---------------------------------------------------------------------------
+# LanePool unit behavior
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout_s(60)
+def test_lanepool_first_commit_wins_and_cancels():
+    """Two attempts for one key: the first commit wins, the loser's cancel
+    event fires and its (late) commit is dropped."""
+    events = {"cancelled": 0}
+    started = threading.Event()
+
+    def slow(cancel):
+        started.set()
+        deadline = time.perf_counter() + 5.0
+        while not cancel.is_set() and time.perf_counter() < deadline:
+            time.sleep(0.005)
+        if cancel.is_set():
+            events["cancelled"] += 1
+            from repro.mapreduce import LaneCancelled
+            raise LaneCancelled(0)
+        return "slow"
+
+    def fast(cancel):
+        return "fast"
+
+    with LanePool(2, max_retries=0) as pool:
+        pool.submit(0, slow)
+        started.wait(2.0)
+        pool.submit(0, fast, clone=True)
+        pool.drain([0])
+        assert pool.results[0] == "fast"
+        assert pool.meta[0]["clone"]
+        assert pool.clone_wins == 1
+    assert events["cancelled"] == 1
+
+
+@pytest.mark.timeout_s(60)
+def test_lanepool_stuck_lane_declared_dead_and_requeued():
+    """A lane wedged past ``stuck_after_s`` is declared dead through the
+    Coordinator heartbeat/remesh machine; its split requeues and completes
+    on a survivor; the pool records the remesh and shrinks."""
+    wedged = threading.Event()
+
+    def maybe_wedge(k):
+        def fn(cancel):
+            if k == 0 and not wedged.is_set():
+                wedged.set()
+                # ignore cancel for a while: a genuinely stuck task (bounded
+                # so the daemon thread exits before interpreter teardown)
+                time.sleep(3.0)
+                from repro.mapreduce import LaneCancelled
+                raise LaneCancelled(k)
+            return k * 10
+        return fn
+
+    with LanePool(2, max_retries=0, stuck_after_s=0.2,
+                  join_timeout_s=10.0) as pool:
+        for k in range(4):
+            pool.submit(k, maybe_wedge(k))
+        pool.drain(range(4))
+        assert {k: pool.results[k] for k in range(4)} == \
+            {0: 0, 1: 10, 2: 20, 3: 30}
+        assert pool.remeshes, "stuck lane never declared dead"
+        assert pool.width == 1
+    # the wedged thread was joined by shutdown (it wakes within 3s)
+
+
+@pytest.mark.timeout_s(60)
+def test_lanepool_shutdown_reports_leaked_thread():
+    """A task that ignores cancellation past the join timeout is reported,
+    not silently leaked (the no-leaked-threads exit guarantee)."""
+    release = threading.Event()
+
+    def stubborn(cancel):
+        release.wait(20.0)
+        return "late"
+
+    pool = LanePool(1, max_retries=0, join_timeout_s=0.2)
+    pool.submit(0, stubborn)
+    time.sleep(0.1)
+    with pytest.raises(RuntimeError, match="leaked lane thread"):
+        pool.shutdown()
+    release.set()                       # let the daemon thread exit cleanly
+    pool.lanes[0].thread.join(timeout=5.0)
+
+
+# ---------------------------------------------------------------------------
+# seeded randomized parity (the CI seed matrix re-runs these per seed)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout_s(600)
+@pytest.mark.parametrize("seed", [CHAOS_SEED, CHAOS_SEED + 1])
+def test_seeded_chaos_parity(seed):
+    rng = np.random.default_rng(seed)
+    xyz = _catalog(2000, seed=seed)
+    job = neighbor_search_job(RADIUS, tile=128)
+    want = run_job(job, xyz).output
+    n_splits = int(rng.integers(2, 7))
+    n_lanes = int(rng.integers(1, 5))
+    src = FaultySplitSource(ArraySplits(xyz, n_splits=n_splits),
+                            seed=seed, delay_p=0.3, fault_p=0.3,
+                            delay_s=0.05, max_faults=2)
+    res = run_job_streaming(
+        job, src, n_lanes=n_lanes, max_retries=2, retry_backoff_s=0.01,
+        speculate=SpeculativeConfig(slowdown=2.0, min_finished=2))
+    assert res.output == want, (seed, n_splits, n_lanes)
+
+
+# hypothesis property: random lane counts, boundaries, fault schedules.
+# Guarded (not module-level importorskip) so the fixed-case chaos tests above
+# always run even where hypothesis is not installed.
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @pytest.mark.timeout_s(900)
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(seed=st.integers(0, 2**16), n_lanes=st.integers(1, 8),
+           n_splits=st.integers(1, 6), spec=st.booleans())
+    def test_property_chaos_parity_wordcount(seed, n_lanes, n_splits, spec):
+        toks = _tokens(2000, 53)
+        job = token_histogram_job(53)
+        want = run_job(job, toks).output
+        src = FaultySplitSource(ArraySplits(toks, n_splits=n_splits),
+                                seed=seed ^ CHAOS_SEED, delay_p=0.25,
+                                fault_p=0.25, delay_s=0.03, max_faults=2)
+        res = run_job_streaming(
+            job, src, n_lanes=n_lanes, max_retries=2, retry_backoff_s=0.005,
+            speculate=(SpeculativeConfig(slowdown=2.0, min_finished=2)
+                       if spec else None))
+        assert np.array_equal(res.output, want), \
+            (seed, n_lanes, n_splits, spec)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_chaos_parity_wordcount():
+        pass

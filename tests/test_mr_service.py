@@ -247,3 +247,71 @@ def test_service_sharded_multidevice():
     assert r.returncode == 0, (
         f"mapreduce-service failed:\n{r.stdout}\n{r.stderr}")
     assert "OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# failure isolation + lane serving (PR 7)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout_s(300)
+def test_service_poison_request_does_not_fail_batchmates():
+    """Regression: one request whose job fails mid-run (passes door
+    validation, raises at reduce trace) must fail ALONE — its coalesced
+    batch-mates are recovered with per-job fallback runs and still get
+    bit-exact outputs."""
+    import dataclasses
+
+    from repro.mapreduce import MapReduceJob, Reducer
+
+    @dataclasses.dataclass(frozen=True)
+    class PoisonReducer(Reducer):
+        pad_value: float = 0.0
+
+        def per_partition(self, owned_p, bucket_p):
+            raise ValueError("poison: invalid query parameters")
+
+    xyz, part, jobs = _setup()
+    singles = [run_job(j, xyz).output for j in jobs]
+    svc = MRQueryService(max_batch=8)
+    svc.load_catalog("sky", xyz, part, codec="int16", tile=64)
+    good = [svc.submit(j, catalog="sky") for j in jobs]
+    poison = MapReduceJob(name="poison", partitioner=part,
+                          reducer=PoisonReducer(), codec="int16", tile=64)
+    bad = svc.submit(poison, catalog="sky")
+    assert svc.run_pending() == 4
+    for r, want in zip(good, singles):
+        assert r.error is None
+        np.testing.assert_array_equal(r.output, want)
+    assert bad.done and isinstance(bad.error, ValueError)
+    with pytest.raises(ValueError, match="poison"):
+        bad.result(timeout=5)
+    # exactly one batch recorded, containing all 4 requests
+    assert len(svc.batches) == 1 and svc.batches[0]["size"] == 4
+
+
+@pytest.mark.timeout_s(300)
+def test_service_lanes_concurrent_batches_and_lane_death():
+    """Lane-backed serving: micro-batches run concurrently on a LanePool;
+    an injected lane death shrinks the pool and requeues the batch instead
+    of killing the service — every request still gets the exact answer."""
+    from repro.ft import LaneChaos
+
+    xyz, part, jobs = _setup()
+    singles = [run_job(j, xyz).output for j in jobs]
+    chaos = LaneChaos(kills=[(0, 0)])
+    svc = MRQueryService(max_batch=2, max_wait_s=0.001, n_lanes=3,
+                         lane_chaos=chaos)
+    svc.load_catalog("sky", xyz, part, codec="int16", tile=64)
+    with svc:
+        reqs = [svc.submit(jobs[i % 3], catalog="sky") for i in range(8)]
+        outs = [r.result(timeout=120) for r in reqs]
+    for got, i in zip(outs, range(8)):
+        want = singles[i % 3]
+        if isinstance(want, np.ndarray):
+            np.testing.assert_array_equal(got, want)
+        else:
+            assert got == want
+    assert len(chaos.deaths) == 1          # the kill actually fired
+    assert sum(b["size"] for b in svc.batches) == 8
+    # close() joined the pool: no leaked lane threads
+    assert svc._pool is None

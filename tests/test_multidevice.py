@@ -57,3 +57,10 @@ def test_mapreduce_streaming_sharded_multidevice():
     """Split-streaming executor == monolithic on an 8-device data mesh
     (2/5/n-of-1 splits, identity+int16, wordcount combiner on/off/auto)."""
     assert "OK" in _run("mapreduce-streaming")
+
+
+@pytest.mark.slow
+def test_mapreduce_lanes_multidevice():
+    """Per-device concurrent lanes across 8 host devices == monolithic,
+    with and without injected chaos (delays, transient faults, clones)."""
+    assert "OK" in _run("mapreduce-lanes")

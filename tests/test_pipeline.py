@@ -147,3 +147,34 @@ def test_token_block_splits_match_source():
         want = src.block(k * 4, 4, 16).reshape(-1, 1).astype(np.float32)
         assert np.array_equal(ts.split(k), want)
         assert ts.split(k).shape == (64, 1)
+
+
+def test_prefetcher_stuck_fetch_raises_named_error():
+    """Satellite regression: a worker wedged inside produce(k) used to leak
+    silently past stop(); it must now raise, naming the stuck fetch."""
+    import threading
+    import time
+
+    release = threading.Event()
+
+    def produce(k):
+        if k == 1:
+            release.wait(20.0)          # wedged fetch (bounded for teardown)
+        return np.full((4,), k, np.float32)
+
+    pf = Prefetcher(produce, depth=1, n=5).start()
+    k0, item0, _, _ = pf.get()
+    assert k0 == 0 and item0[0] == 0
+    time.sleep(0.05)                    # let the worker enter produce(1)
+    with pytest.raises(RuntimeError, match=r"inside produce\(1\)"):
+        pf.stop(timeout=0.2)
+    release.set()                       # unwedge so the daemon thread exits
+    pf._thread.join(timeout=5.0)
+    assert not pf._thread.is_alive()
+
+
+def test_prefetcher_clean_stop_clears_thread():
+    pf = Prefetcher(lambda k: k, depth=2, n=3)
+    with pf as p:
+        assert p.get()[1] == 0
+    assert pf._thread is None           # joined and cleared, no leak
