@@ -591,6 +591,76 @@ def table4_amdahl():
     return rows
 
 
+def fig7_spill():
+    """External shuffle spill tier (Hadoop's map-side spill-to-disk, the
+    paper's memory-for-disk trade on low-power nodes): a pair job whose
+    accumulated wire streams exceed a spill budget set to 1/4 of the
+    spill-off accumulation, so the job can only complete out of core.
+    Rows: spill OFF (today's accumulate path), spill ON at budget/4, and
+    spill-everything (budget=0, the fully synchronous floor). Gates
+    (asserted here, not just reported): all runs bit-identical to the
+    monolithic oracle, and measured peak resident wire bytes <= budget +
+    one spill chunk."""
+    import tempfile
+    from repro.data import MemmapCatalogSplits, sky
+    from repro.mapreduce import (SpillConfig, neighbor_search_job, run_job,
+                                 run_job_streaming)
+
+    def best(fn, reps=3):
+        fn()                                    # warmup (compile caches)
+        return min((fn() for _ in range(reps)), key=lambda r: r.stats.wall_s)
+
+    rows = []
+    with tempfile.TemporaryDirectory() as d:
+        xyz = sky.make_catalog(48000, 0)
+        cat = os.path.join(d, "catalog.f32")
+        MemmapCatalogSplits.write(cat, xyz)
+        src = MemmapCatalogSplits(cat, d=3, rows_per_split=6000)
+        job = neighbor_search_job(0.02, codec="int16", tile=256)
+
+        mono = run_job(job, xyz)
+        off = best(lambda: run_job_streaming(job, src))
+        assert off.output == mono.output, (off.output, mono.output)
+        rows.append(("fig7_spill_off", off.stats.wall_s * 1e6,
+                     f"pairs={off.output}_nsplits={off.stats.n_splits}"
+                     f"_wireB={off.stats.shuffle_wire_bytes}"))
+
+        # budget = 1/4 of the spill-off wire accumulation: the run CANNOT
+        # hold its streams resident — completing at all is the claim
+        budget = off.stats.shuffle_wire_bytes // 4
+        on = best(lambda: run_job_streaming(
+            job, src, spill=SpillConfig(budget_bytes=budget,
+                                        dir=os.path.join(d, "sp"))))
+        st = on.stats
+        assert on.output == mono.output, (on.output, mono.output)
+        assert st.spilled_splits == st.n_splits, st.spilled_splits
+        assert st.spill_peak_bytes <= budget + st.spill_chunk_bytes, \
+            (st.spill_peak_bytes, budget, st.spill_chunk_bytes)
+        rows.append(("fig7_spill_on_quarter", st.wall_s * 1e6,
+                     f"pairs={on.output}_budgetB={budget}"
+                     f"_spillB={st.spill_bytes}"
+                     f"_peakB={st.spill_peak_bytes}"
+                     f"_chunkB={st.spill_chunk_bytes}"
+                     f"_ranges={st.spill_ranges}"
+                     f"_spilled={st.spilled_splits}"
+                     f"_spillwall_us={st.spill_wall_s * 1e6:.0f}"))
+
+        # budget=0: every split spills synchronously — the out-of-core floor
+        zero = best(lambda: run_job_streaming(
+            job, src, spill=SpillConfig(budget_bytes=0,
+                                        dir=os.path.join(d, "sp0"))), reps=2)
+        zst = zero.stats
+        assert zero.output == mono.output, (zero.output, mono.output)
+        assert zst.spill_peak_bytes <= zst.spill_chunk_bytes, \
+            (zst.spill_peak_bytes, zst.spill_chunk_bytes)
+        rows.append(("fig7_spill_everything", zst.wall_s * 1e6,
+                     f"pairs={zero.output}_spillB={zst.spill_bytes}"
+                     f"_peakB={zst.spill_peak_bytes}"
+                     f"_ranges={zst.spill_ranges}"
+                     f"_vs_off_wall={zst.wall_s / off.stats.wall_s:.2f}x"))
+    return rows
+
+
 ALL = [fig1_direct_io, table2_network, fig2_pipeline, fig3_improvements,
-       fig4_streaming, fig5_service, fig6_speculation, table3_apps,
-       table4_amdahl]
+       fig4_streaming, fig5_service, fig6_speculation, fig7_spill,
+       table3_apps, table4_amdahl]

@@ -96,6 +96,17 @@ class Prefetcher:
     ``prep_s - wait_s`` of I/O was hidden under the consumer's own work.
     Returns ``None`` once the source is exhausted. Context manager: the
     thread is stopped (and joined) on exit, success or failure.
+
+    Terminal state is LATCHED: once the exhaustion sentinel or a producer
+    exception has surfaced, every subsequent ``get()`` re-surfaces it
+    (returns ``None`` again / re-raises the same exception) instead of
+    blocking forever on an empty queue with a dead worker. A consumer
+    blocked in ``get()`` wakes with ``None`` when ``stop()`` is called.
+
+    ``stop(drain=True)`` is the producer-side counterpart for writers whose
+    produced items must not be lost (the spill writer): the worker finishes
+    its in-flight ``produce`` and hands the item off instead of dropping it
+    when it races a full queue, and every undelivered record is returned.
     """
 
     def __init__(self, produce: Callable[[int], object], *, depth: int = 2,
@@ -103,10 +114,14 @@ class Prefetcher:
         self._produce = produce
         self._q: queue.Queue = queue.Queue(maxsize=max(depth, 1))
         self._stop = threading.Event()
+        self._drain = threading.Event()
         self._start_k = start
         self._n = n
         self._thread: threading.Thread | None = None
         self._busy_k: int | None = None    # index currently inside produce()
+        self._terminal = None              # latched: _EXHAUSTED or exception
+
+    _EXHAUSTED = object()
 
     def start(self) -> "Prefetcher":
         if self._thread is None:
@@ -115,6 +130,8 @@ class Prefetcher:
         return self
 
     def _put(self, rec) -> bool:
+        # cancel semantics: stop() abandons the in-flight item (the drain
+        # path instead empties the queue until this hand-off succeeds)
         while not self._stop.is_set():
             try:
                 self._q.put(rec, timeout=0.1)
@@ -125,7 +142,7 @@ class Prefetcher:
 
     def _worker(self):
         k = self._start_k
-        while not self._stop.is_set():
+        while not (self._stop.is_set() or self._drain.is_set()):
             if self._n is not None and k >= self._start_k + self._n:
                 self._put(None)
                 return
@@ -142,23 +159,60 @@ class Prefetcher:
             k += 1
 
     def get(self):
+        if self._terminal is not None:         # latched terminal state
+            if self._terminal is self._EXHAUSTED:
+                return None
+            raise self._terminal
         if self._thread is None:
             self.start()
         t0 = time.perf_counter()
-        rec = self._q.get()
+        while True:
+            try:
+                rec = self._q.get(timeout=0.05)
+                break
+            except queue.Empty:
+                if self._stop.is_set():        # stop() wakes blocked consumers
+                    rec = None
+                    break
         wait = time.perf_counter() - t0
         if rec is None:
+            self._terminal = self._EXHAUSTED
             return None
         if isinstance(rec, BaseException):
+            self._terminal = rec
             raise rec
         k, item, prep = rec
         return k, item, wait, prep
 
-    def stop(self, timeout: float = 2.0):
+    def stop(self, timeout: float = 2.0, drain: bool = False):
         """Stop and join the producer thread. A failed join used to pass
         silently — a worker wedged inside ``produce(k)`` would leak past the
         ``with`` block and hold its buffers forever; now it raises, naming
-        the stuck fetch so the I/O that wedged is identifiable."""
+        the stuck fetch so the I/O that wedged is identifiable.
+
+        ``drain=True`` (the spill writer's shutdown path): instead of
+        abandoning the worker's in-flight item when it races a full queue,
+        let the current ``produce`` finish and hand off, consume every
+        undelivered record ourselves, and return them — nothing the
+        producer finished is ever dropped on the floor. Returns the drained
+        record list (``None``/exception records included, for inspection);
+        plain ``stop()`` returns ``None`` and keeps cancel semantics."""
+        drained = None
+        if drain and self._thread is not None:
+            drained = []
+            self._drain.set()
+            deadline = time.perf_counter() + timeout
+            while (self._thread.is_alive()
+                   and time.perf_counter() < deadline):
+                try:
+                    drained.append(self._q.get(timeout=0.02))
+                except queue.Empty:
+                    pass
+            while True:                         # leftovers after worker exit
+                try:
+                    drained.append(self._q.get_nowait())
+                except queue.Empty:
+                    break
         self._stop.set()
         if self._thread:
             self._thread.join(timeout=timeout)
@@ -172,6 +226,7 @@ class Prefetcher:
                     f"{'item ' + str(k) if k is not None else 'the queue'} "
                     f"is stuck and its buffers cannot be reclaimed")
             self._thread = None
+        return drained
 
     def __enter__(self) -> "Prefetcher":
         return self.start()
@@ -236,10 +291,17 @@ class MemmapCatalogSplits(SplitSource):
 
     def __init__(self, path: str, d: int, rows_per_split: int):
         import os
-        self.arr = (np.zeros(0, np.float32)       # mmap rejects empty files
-                    if os.path.getsize(path) == 0
-                    else np.memmap(path, dtype=np.float32, mode="r"))
+        size = os.path.getsize(path)
         self.d = int(d)
+        rem = size % (self.d * 4)
+        if rem:
+            raise ValueError(
+                f"catalog file {path!r} is {size} bytes, not a multiple of "
+                f"d*4 = {self.d * 4} ({rem} trailing bytes) — truncated or "
+                f"corrupt; refusing to silently read a smaller catalog")
+        self.arr = (np.zeros(0, np.float32)       # mmap rejects empty files
+                    if size == 0
+                    else np.memmap(path, dtype=np.float32, mode="r"))
         self.n_rows = self.arr.shape[0] // self.d
         self.rows_per_split = int(rows_per_split)
         assert self.rows_per_split >= 1
@@ -304,6 +366,37 @@ class TokenBlockSplits(SplitSource):
         block = self.source.block(self.start_row + k * self.rows_per_split,
                                   self.rows_per_split, self.seq_len)
         return np.asarray(block, np.float32).reshape(-1, 1)
+
+
+class SpilledStreamSplits(SplitSource):
+    """Reads spilled wire-dtype shuffle segments back as partition-range
+    records — the read side of the external shuffle tier. Wraps anything
+    with the ``SpillStore`` read interface (``n_ranges``, ``read_range``);
+    "split" ``z`` is partition range ``z``.
+
+    Protocol deviation, on purpose: ``split(z)`` returns the *merged range
+    record dict* produced by ``SpillStore.read_range`` (host wire arrays +
+    ``lo``/``hi`` partition bounds), not a raw ``[n, d]`` float32 catalog
+    chunk — the segments hold post-map encoded streams, and decoding them
+    back to rows would defeat the codec. Consumers are the streamed-reduce
+    path in the executor, which feeds each record straight to
+    ``shuffle_reduce_device_streamed``; ``materialize()`` is unsupported
+    for the same reason.
+    """
+
+    def __init__(self, store):
+        self.store = store
+
+    def n_splits(self) -> int:
+        return int(self.store.n_ranges)
+
+    def split(self, z: int):
+        return self.store.read_range(z)
+
+    def materialize(self):
+        raise TypeError(
+            "SpilledStreamSplits yields encoded range records, not catalog "
+            "rows; there is no meaningful row-matrix materialization")
 
 
 # ---------------------------------------------------------------------------

@@ -33,14 +33,19 @@ from repro.mapreduce.instrumentation import (RequestStats, StageStats,
 from repro.mapreduce.job import (DeviceShuffledData, HashPartitioner,
                                  JobResult, MappedSplit, MapReduceJob,
                                  Partitioner, Reducer, ResidentCatalog,
-                                 ShuffledData, TierData, concat_mapped,
-                                 group_batch_compatible, map_split_device,
-                                 plan_tiers, reduce_stage, run_job, run_jobs,
-                                 shuffle_once, shuffle_reduce_device,
+                                 ShuffledData, StreamSummary, TierData,
+                                 concat_mapped, group_batch_compatible,
+                                 map_split_device, plan_tiers, reduce_stage,
+                                 run_job, run_jobs, shuffle_once,
+                                 shuffle_reduce_device,
+                                 shuffle_reduce_device_streamed,
                                  shuffle_signature, shuffle_stage)
 from repro.mapreduce.executor import (Combiner, JobDeadlineExceeded,
-                                      LaneCancelled, LanePool, StreamSummary,
+                                      LaneCancelled, LanePool,
                                       run_job_streaming, run_jobs_streaming)
+from repro.mapreduce.spill import (SpillConfig, SpilledChunk, SpillStore,
+                                   mapped_to_host, mapped_wire_nbytes,
+                                   plan_bounds)
 from repro.mapreduce.zones import (PairCountReducer, ZonePartitioner,
                                    neighbor_pairs_dense, neighbor_search_job)
 from repro.mapreduce.stats import PairHistReducer, neighbor_statistics_job

@@ -52,10 +52,12 @@ operates on the replicated partial.
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 import itertools
 import queue
+import tempfile
 import threading
 import time
 
@@ -69,9 +71,14 @@ from repro.ft.coordinator import Coordinator, CoordinatorConfig
 from repro.ft.stragglers import SpeculativePolicy
 from repro.mapreduce.codecs import get_codec
 from repro.mapreduce.instrumentation import StageStats
-from repro.mapreduce.job import (JobResult, concat_mapped,
+from repro.mapreduce.job import (JobResult, MappedSplit,  # noqa: F401
+                                 StreamSummary, concat_mapped,
                                  host_shuffle_reduce, map_split_device,
-                                 shuffle_reduce_device, validate_batch)
+                                 shuffle_reduce_device,
+                                 shuffle_reduce_device_streamed,
+                                 validate_batch)
+from repro.mapreduce.spill import (SpillConfig, SpillStore, mapped_to_host,
+                                   mapped_wire_nbytes, plan_bounds)
 
 
 # ---------------------------------------------------------------------------
@@ -109,25 +116,6 @@ class Combiner:
         if acc is None:
             return partials
         return jax.tree.map(jnp.add, acc, partials)
-
-
-@dataclasses.dataclass
-class StreamSummary:
-    """Aggregate post-shuffle state of a combine-mode streaming run — what
-    ``Reducer.finalize`` sees instead of a materialized ``ShuffledData``.
-    ``n_owned``/``n_bucket`` are per-partition counts SUMMED over splits, so
-    count-based corrections (self-pair removal etc.) work unchanged."""
-
-    n_owned: np.ndarray        # [P] int64
-    n_bucket: np.ndarray       # [P] int64
-    pair_cells: float = 0.0
-    owned_cells: float = 0.0
-    real_pair_cells: float = 0.0
-
-    @property
-    def padded_ratio(self) -> float:
-        return (self.pair_cells / self.real_pair_cells
-                if self.real_pair_cells else 1.0)
 
 
 class _Agg:
@@ -195,6 +183,211 @@ def _resolve_combiner(combiner, jobs, codec):
     if any(c != combs[0] for c in combs[1:]):
         return None
     return combs[0]
+
+
+# ---------------------------------------------------------------------------
+# External shuffle: spill accumulated wire streams to disk, stream back
+# ---------------------------------------------------------------------------
+
+def _resolve_spill(spill) -> SpillConfig | None:
+    """None -> off; a number -> ``SpillConfig(budget_bytes=number)``; a
+    ``SpillConfig`` -> itself. A config whose budget is None/inf resolves
+    to None — never spill, bit-identical to today's accumulate path."""
+    if spill is None:
+        return None
+    cfg = (spill if isinstance(spill, SpillConfig)
+           else SpillConfig(budget_bytes=float(spill)))
+    return cfg if cfg.enabled else None
+
+
+class _ResidentMeter:
+    """Thread-safe high-water meter of the spill tier's resident wire bytes
+    (host-ified pending streams + in-flight writes + read-back ranges) —
+    what the acceptance bound ``peak <= budget + one chunk`` measures."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.cur = 0
+        self.peak = 0
+
+    def add(self, n: int):
+        with self._lock:
+            self.cur += int(n)
+            if self.cur > self.peak:
+                self.peak = self.cur
+
+    def sub(self, n: int):
+        with self._lock:
+            self.cur -= int(n)
+
+
+def _auto_ranges(cfg: SpillConfig, est_total_bytes: float, P: int) -> int:
+    """Read-back range count: ~4 ranges per budget's worth of estimated
+    spill, so one range's resident bytes sit well inside the budget."""
+    if cfg.n_ranges is not None:
+        z = int(cfg.n_ranges)
+    else:
+        z = int(np.ceil(4.0 * float(est_total_bytes)
+                        / max(float(cfg.budget_bytes), 1.0)))
+    return max(1, min(z, int(P), int(cfg.max_ranges)))
+
+
+def _range_record_nbytes(rec: dict) -> int:
+    n = sum(int(p.nbytes) for p in rec["payloads"])
+    n += (int(rec["keys"].nbytes) + int(rec["dest_eff"].nbytes)
+          + int(rec["src"].nbytes))
+    if rec["skey"] is not None:
+        n += int(rec["skey"].nbytes)
+    return n
+
+
+def _streamed_reduce(store: SpillStore, meter: _ResidentMeter, jobs, P: int,
+                     stats: StageStats, mesh):
+    """Stream every committed partition range back through a ``Prefetcher``
+    double buffer — read + host->device transfer of range z+1 hidden under
+    range z's shuffle+reduce — into ``shuffle_reduce_device_streamed``.
+    Exposed read waits land in ``spill_wall_s``; hidden prefetch time in
+    ``overlap_hidden_s``. Each range's wire bytes leave the meter as soon
+    as its reduce returns, so peak residency is O(one range)."""
+
+    def produce(z):
+        rec = store.read_range(z)
+        nb = _range_record_nbytes(rec)
+        meter.add(nb)
+        m = MappedSplit(
+            payloads=tuple(jnp.asarray(p) for p in rec["payloads"]),
+            keys=jnp.asarray(rec["keys"]),
+            dest_eff=jnp.asarray(rec["dest_eff"]),
+            src=jnp.asarray(rec["src"]),
+            skey=(None if rec["skey"] is None
+                  else jnp.asarray(rec["skey"])),
+            n_rows=int(rec["n_rows"]), d=int(rec["d"]), nbytes_in=0)
+        return rec["lo"], rec["hi"], m, nb
+
+    def ranges():
+        with Prefetcher(produce, depth=1, n=store.n_ranges) as pf:
+            while (got := pf.get()) is not None:
+                _, (lo, hi, m, nb), wait, prep = got
+                stats.spill_wall_s += wait
+                stats.overlap_hidden_s += max(prep - wait, 0.0)
+                yield lo, hi, m
+                meter.sub(nb)
+
+    return shuffle_reduce_device_streamed(jobs, ranges(), P, stats, mesh)
+
+
+class _SpillRuntime:
+    """Sequential-path spill driver for device accumulate mode.
+
+    Double-buffered in the Hadoop ``io.sort.mb`` spirit: mapped splits
+    host-ify into a pending buffer; when it crosses HALF the budget it is
+    handed to the store's async writer (one buffer filling while one
+    drains) with at most one chunk in flight, so resident wire bytes stay
+    bounded by the budget plus one chunk. A chunk bigger than half the
+    budget is written synchronously instead of overlapped — tiny budgets
+    degrade gracefully to spill-every-split, budget=0 included. If the run
+    finishes without ever crossing the threshold, ``finish`` falls back to
+    the monolithic concat+reduce verbatim (enabling spill with a roomy
+    budget costs only the host-ify copies)."""
+
+    def __init__(self, cfg: SpillConfig, P: int, K: int, stats: StageStats):
+        self.cfg = cfg
+        self.P = int(P)
+        self.K = int(K)
+        self.stats = stats
+        self.budget = float(cfg.budget_bytes)
+        self.meter = _ResidentMeter()
+        self.pending: list = []
+        self.pending_bytes = 0
+        self.splits_seen = 0
+        self.n_submitted = 0
+        self.exposed_wait_s = 0.0
+        self.store: SpillStore | None = None
+        self._inflight = collections.deque()   # wire bytes per async chunk
+
+    def _ensure_store(self) -> SpillStore:
+        if self.store is None:
+            root = self.cfg.dir or tempfile.mkdtemp(prefix="mr-spill-")
+            self.store = SpillStore(root, self.P,
+                                    write_fault=self.cfg.write_fault,
+                                    on_written=self._on_written)
+        return self.store
+
+    def _on_written(self, chunk):
+        # writer thread: the chunk's host buffers are on disk and dropped
+        if self._inflight:
+            self.meter.sub(self._inflight.popleft())
+
+    def add(self, m: MappedSplit):
+        """Host-ify one mapped split (its device buffers die with the
+        caller's reference) and spill when the pending buffer fills."""
+        t0 = time.perf_counter()
+        h = mapped_to_host(m)
+        self.stats.spill_wall_s += time.perf_counter() - t0
+        nb = mapped_wire_nbytes(h)
+        if self.pending and self.pending_bytes + nb > self.budget / 2:
+            self._flush()                  # keep the filling buffer bounded
+        self.meter.add(nb)
+        self.pending.append(h)
+        self.pending_bytes += nb
+        self.splits_seen += 1
+        if self.pending_bytes > self.budget / 2:
+            self._flush()
+
+    def _flush(self):
+        if not self.pending:
+            return
+        store = self._ensure_store()
+        if store._bounds is None:
+            # first flush plans the range bounds: weight partitions by this
+            # chunk's bucket counts, extrapolate total spill from the
+            # splits seen so far
+            w = np.zeros(self.P, np.float64)
+            for h in self.pending:
+                w += np.bincount(h.dest_eff, minlength=self.P + 1)[:self.P]
+            est = self.pending_bytes * self.K / max(self.splits_seen, 1)
+            store.set_bounds(plan_bounds(
+                w, _auto_ranges(self.cfg, est, self.P)))
+        t0 = time.perf_counter()
+        store.wait_writes()                    # <= 1 chunk in flight
+        chunk_bytes = self.pending_bytes
+        self._inflight.append(chunk_bytes)
+        store.submit_chunk(self.pending)
+        self.n_submitted += 1
+        self.stats.spilled_splits += len(self.pending)
+        self.pending = []
+        self.pending_bytes = 0
+        if chunk_bytes > self.budget / 2:
+            store.wait_writes()                # no room to overlap: go sync
+        self.exposed_wait_s += time.perf_counter() - t0
+
+    def finish(self, jobs, stats: StageStats, mesh):
+        """Final reduce: streamed per-range read-back when anything
+        spilled, else the monolithic concat path over the (host) pending
+        streams. Same return shape as ``shuffle_reduce_device``."""
+        if self.n_submitted == 0:
+            stats.spill_peak_bytes = self.meter.peak
+            return shuffle_reduce_device(jobs, concat_mapped(self.pending),
+                                         self.P, stats, mesh)
+        self._flush()                          # remainder chunk
+        store = self.store
+        t0 = time.perf_counter()
+        store.wait_writes()
+        self.exposed_wait_s += time.perf_counter() - t0
+        store.sweep_staged()
+        stats.spill_ranges = store.n_ranges
+        out = _streamed_reduce(store, self.meter, jobs, self.P, stats, mesh)
+        stats.spill_bytes += store.bytes_written
+        stats.spill_chunk_bytes = store.max_chunk_bytes
+        stats.spill_peak_bytes = self.meter.peak
+        stats.spill_wall_s += self.exposed_wait_s
+        stats.overlap_hidden_s += max(
+            store.write_wall_s - self.exposed_wait_s, 0.0)
+        return out
+
+    def close(self):
+        if self.store is not None:
+            self.store.close()
 
 
 # ---------------------------------------------------------------------------
@@ -568,7 +761,8 @@ def run_jobs_streaming(jobs, source: SplitSource, *, mesh=None,
                        prefetch: int = 2, straggler_monitor=None,
                        n_lanes: int = 1, speculate=None, chaos=None,
                        max_retries: int = 0, retry_backoff_s: float = 0.05,
-                       deadline_s: float | None = None) -> list[JobResult]:
+                       deadline_s: float | None = None,
+                       spill=None) -> list[JobResult]:
     """Stream every split of ``source`` through map -> combine -> shuffle ->
     reduce and return one ``JobResult`` per job (all sharing one
     ``StageStats`` with per-split records).
@@ -607,6 +801,20 @@ def run_jobs_streaming(jobs, source: SplitSource, *, mesh=None,
     - ``deadline_s``: per-job deadline — ``JobDeadlineExceeded`` instead of
       a hang when splits cannot finish.
 
+    ``spill`` (a byte budget or a ``SpillConfig``) engages the external
+    shuffle tier for device-engine accumulate mode (no valid combiner):
+    when the accumulated wire streams exceed the budget they spill to
+    partition-range-bucketed segment files and the final reduce streams
+    each range back through a prefetch double buffer — peak resident wire
+    bytes O(spill chunk) instead of O(catalog/codec ratio), bit-identical
+    for any budget (0 = spill everything, None/inf = never spill ≡ off).
+    When a combiner is active nothing accumulates, so ``spill`` is a
+    no-op; the host engine rejects it. With lanes, every split's stream
+    spills at map time (segments commit with the split, so retried/cloned
+    splits stay lane-safe). Spill files live under ``SpillConfig.dir`` (a
+    fresh temp dir by default) and are reclaimed on exit, success or
+    failure.
+
     The partition space must be split-independent (``n_partitions`` is read
     from the first split) — true for the stock zone/hash partitioners.
     """
@@ -624,6 +832,12 @@ def run_jobs_streaming(jobs, source: SplitSource, *, mesh=None,
     comb = _resolve_combiner(combiner, jobs, codec)
     K = int(source.n_splits())
     device = engine == "device"
+    spill_cfg = _resolve_spill(spill)
+    if spill_cfg is not None and not device:
+        raise ValueError("spill= requires the device engine: the spill "
+                         "tier stores wire-dtype encoded streams")
+    if comb is not None:
+        spill_cfg = None     # combine mode never accumulates: nothing to spill
     stats = StageStats(job="+".join(j.name for j in jobs), engine=engine,
                        codec=codec.name, n_splits=K,
                        combiner=comb.name if comb else "")
@@ -635,7 +849,7 @@ def run_jobs_streaming(jobs, source: SplitSource, *, mesh=None,
             comb=comb, K=K, stats=stats, straggler_monitor=straggler_monitor,
             n_lanes=max(1, int(n_lanes)), policy=policy, chaos=chaos,
             max_retries=max_retries, retry_backoff_s=retry_backoff_s,
-            deadline_s=deadline_s)
+            deadline_s=deadline_s, spill_cfg=spill_cfg)
 
     def fetch(k):
         # -> (items, raw_rows, raw_bytes): the RAW split size is carried
@@ -669,9 +883,10 @@ def run_jobs_streaming(jobs, source: SplitSource, *, mesh=None,
     raw_items_total = 0
     raw_bytes_total = 0
     P = None
+    spill_rt = None
 
     def consume(k, item, wait_s, prep_s):
-        nonlocal acc, P, raw_items_total, raw_bytes_total
+        nonlocal acc, P, raw_items_total, raw_bytes_total, spill_rt
         items_k, raw_rows, raw_bytes = item
         raw_items_total += raw_rows
         raw_bytes_total += raw_bytes
@@ -687,7 +902,12 @@ def run_jobs_streaming(jobs, source: SplitSource, *, mesh=None,
             m = map_split_device(part, codec, items_k, P)
             stats.map_wall_s += time.perf_counter() - t0
             if comb is None:
-                mapped.append(m)
+                if spill_cfg is not None:
+                    if spill_rt is None:
+                        spill_rt = _SpillRuntime(spill_cfg, P, K, stats)
+                    spill_rt.add(m)      # host-ify + maybe flush to disk
+                else:
+                    mapped.append(m)
             else:
                 totals, sd, sp, sr = shuffle_reduce_device(jobs, m, P, stats,
                                                            mesh)
@@ -721,34 +941,42 @@ def run_jobs_streaming(jobs, source: SplitSource, *, mesh=None,
         if straggler_monitor is not None:
             straggler_monitor.record(k, rec["wall_s"])
 
-    if K > 1 and prefetch > 0:
-        produce = fetch_to_device if device else fetch
-        with Prefetcher(produce, depth=prefetch, n=K) as pf:
-            while (got := pf.get()) is not None:
-                consume(*got)
-    else:
-        for got in synchronous():
-            consume(*got)
-    assert len(recs) == K, (len(recs), K)
-
-    if comb is None:
-        # no valid map-side combine: the accumulated wire-format streams
-        # cross ONE global shuffle+reduce (Hadoop's reduce-after-last-map)
-        if device:
-            totals, sd, sp, sr = shuffle_reduce_device(
-                jobs, concat_mapped(mapped), P, stats, mesh)
+    try:
+        if K > 1 and prefetch > 0:
+            produce = fetch_to_device if device else fetch
+            with Prefetcher(produce, depth=prefetch, n=K) as pf:
+                while (got := pf.get()) is not None:
+                    consume(*got)
         else:
-            items_all = (host_items[0] if len(host_items) == 1
-                         else np.concatenate(host_items, axis=0))
-            totals, sd, sp, sr = host_shuffle_reduce(jobs, items_all, stats,
-                                                     mesh)
-        agg.add(sd, sp, sr)
-        summary = sd
-    else:
-        t0 = time.perf_counter()
-        totals = jax.block_until_ready(acc)
-        stats.combine_wall_s += time.perf_counter() - t0
-        summary = agg.summary()
+            for got in synchronous():
+                consume(*got)
+        assert len(recs) == K, (len(recs), K)
+
+        if comb is None:
+            # no valid map-side combine: the accumulated wire-format streams
+            # cross ONE global shuffle+reduce (Hadoop's reduce-after-last-map)
+            # — streamed per partition range from disk when they spilled
+            if device:
+                if spill_rt is not None:
+                    totals, sd, sp, sr = spill_rt.finish(jobs, stats, mesh)
+                else:
+                    totals, sd, sp, sr = shuffle_reduce_device(
+                        jobs, concat_mapped(mapped), P, stats, mesh)
+            else:
+                items_all = (host_items[0] if len(host_items) == 1
+                             else np.concatenate(host_items, axis=0))
+                totals, sd, sp, sr = host_shuffle_reduce(jobs, items_all,
+                                                         stats, mesh)
+            agg.add(sd, sp, sr)
+            summary = sd
+        else:
+            t0 = time.perf_counter()
+            totals = jax.block_until_ready(acc)
+            stats.combine_wall_s += time.perf_counter() - t0
+            summary = agg.summary()
+    finally:
+        if spill_rt is not None:
+            spill_rt.close()         # reclaim segments, success or failure
     agg.finish(stats)
     # n_items/map_bytes always mean the RAW catalog (what the maps read) —
     # the per-split stages counted post-precombine rows when a combiner ran
@@ -769,7 +997,8 @@ def _fence_mapped(m):
 
 def _run_jobs_lanes(jobs, source, *, mesh, device, codec, part, comb, K,
                     stats, straggler_monitor, n_lanes, policy, chaos,
-                    max_retries, retry_backoff_s, deadline_s):
+                    max_retries, retry_backoff_s, deadline_s,
+                    spill_cfg=None):
     """The ``LanePool`` execution path of ``run_jobs_streaming``: splits run
     concurrently, each lane's stages fill a PRIVATE ``StageStats`` that
     merges into the shared one at commit (under the pool lock, so the
@@ -792,6 +1021,37 @@ def _run_jobs_lanes(jobs, source, *, mesh, device, codec, part, comb, K,
     host_items: dict[int, np.ndarray] = {}
     recs: list[dict] = []
     state = {"acc": None, "P": None, "raw_items": 0, "raw_bytes": 0}
+
+    # Lane-mode spill: every split's stream is staged to disk by its own
+    # lane (no cross-lane accumulation buffer to bound — lanes run
+    # concurrently, so the budget degenerates to spill-per-split) and the
+    # winning attempt's segments are finalize-renamed in on_commit, under
+    # the pool lock. Losing clones leave only staged litter, swept before
+    # read-back. The first lane to stage plans the range bounds.
+    spill_state = None
+    if spill_cfg is not None and device and comb is None:
+        spill_state = {"cfg": spill_cfg, "store": None,
+                       "meter": _ResidentMeter(),
+                       "lock": threading.Lock(),
+                       "ready": threading.Event()}
+
+    def spill_store_for(h, P_k):
+        st = spill_state
+        if not st["ready"].is_set():
+            with st["lock"]:
+                if not st["ready"].is_set():
+                    root = (st["cfg"].dir
+                            or tempfile.mkdtemp(prefix="mr-spill-"))
+                    store = SpillStore(root, P_k,
+                                       write_fault=st["cfg"].write_fault)
+                    w = np.bincount(h.dest_eff, minlength=P_k + 1)[:P_k]
+                    est = mapped_wire_nbytes(h) * K
+                    store.set_bounds(plan_bounds(
+                        w, _auto_ranges(st["cfg"], est, P_k)))
+                    st["store"] = store
+                    st["ready"].set()
+        st["ready"].wait()
+        return st["store"]
 
     def fetch(k, cancel):
         if hasattr(source, "split_cancellable"):
@@ -821,7 +1081,24 @@ def _run_jobs_lanes(jobs, source, *, mesh, device, codec, part, comb, K,
                 if cancel.is_set():
                     raise LaneCancelled(k)
                 if comb is None:
-                    payload = ("mapped", _fence_mapped(m))
+                    if spill_state is not None:
+                        t0 = time.perf_counter()
+                        h = mapped_to_host(_fence_mapped(m))
+                        del m, items_k       # device buffers reclaimable now
+                        nb = mapped_wire_nbytes(h)
+                        store = spill_store_for(h, P_k)
+                        spill_state["meter"].add(nb)
+                        try:
+                            if cancel.is_set():
+                                raise LaneCancelled(k)
+                            chunk = store.stage_chunk([h], store.next_tag())
+                        finally:
+                            spill_state["meter"].sub(nb)
+                        local.spill_wall_s += time.perf_counter() - t0
+                        local.spilled_splits = 1
+                        payload = ("spilled", chunk, nb)
+                    else:
+                        payload = ("mapped", _fence_mapped(m))
                 else:
                     totals, sd, sp, sr = shuffle_reduce_device(
                         jobs, m, P_k, local, mesh)
@@ -857,6 +1134,11 @@ def _run_jobs_lanes(jobs, source, *, mesh, device, codec, part, comb, K,
             t0 = time.perf_counter()
             state["acc"] = comb.combine(state["acc"], totals)
             stats.combine_wall_s += time.perf_counter() - t0
+        elif kind == "spilled":
+            # lane-safe commit: the winning attempt's staged segments
+            # finalize-rename here, serialized under the pool lock; a
+            # losing clone's chunk never reaches this hook
+            spill_state["store"].commit_chunk(rest[0])
         elif kind == "mapped":
             mapped[k] = rest[0]
         else:
@@ -872,41 +1154,59 @@ def _run_jobs_lanes(jobs, source, *, mesh, device, codec, part, comb, K,
         if straggler_monitor is not None and straggler_monitor is not policy:
             straggler_monitor.record(k, meta["wall_s"])
 
-    with LanePool(n_lanes, policy=policy, chaos=chaos,
-                  max_retries=max_retries, backoff_s=retry_backoff_s,
-                  deadline_s=deadline_s, devices=devices,
-                  on_commit=on_commit) as pool:
-        for k in range(K):
-            pool.submit(k, make_task(k))
-        pool.drain(range(K), make_task_fn=make_task)
-        stats.n_lanes = n_lanes
-        stats.speculated = pool.speculated
-        stats.clone_wins = pool.clone_wins
-        stats.retries = pool.retries
-        stats.lane_walls = tuple(round(ln.busy_s, 6) for ln in pool.lanes)
-    assert len(recs) == K, (len(recs), K)
+    try:
+        with LanePool(n_lanes, policy=policy, chaos=chaos,
+                      max_retries=max_retries, backoff_s=retry_backoff_s,
+                      deadline_s=deadline_s, devices=devices,
+                      on_commit=on_commit) as pool:
+            for k in range(K):
+                pool.submit(k, make_task(k))
+            pool.drain(range(K), make_task_fn=make_task)
+            stats.n_lanes = n_lanes
+            stats.speculated = pool.speculated
+            stats.clone_wins = pool.clone_wins
+            stats.retries = pool.retries
+            stats.lane_walls = tuple(round(ln.busy_s, 6)
+                                     for ln in pool.lanes)
+        assert len(recs) == K, (len(recs), K)
 
-    P = state["P"]
-    if comb is None:
-        # one global shuffle+reduce over the accumulated per-split streams,
-        # concatenated in split order (deterministic regardless of commit
-        # order — and bit-identical to any order by the multiset contract)
-        if device:
-            totals, sd, sp, sr = shuffle_reduce_device(
-                jobs, concat_mapped([mapped[k] for k in range(K)]), P, stats,
-                mesh)
+        P = state["P"]
+        if comb is None:
+            # one global shuffle+reduce over the accumulated per-split
+            # streams — streamed back per partition range when they
+            # spilled, else concatenated in split order (deterministic
+            # regardless of commit order — and bit-identical to any order
+            # by the multiset contract)
+            if device:
+                if spill_state is not None:
+                    store = spill_state["store"]
+                    store.sweep_staged()     # cancelled clones' litter
+                    stats.spill_ranges = store.n_ranges
+                    totals, sd, sp, sr = _streamed_reduce(
+                        store, spill_state["meter"], jobs, P, stats, mesh)
+                    stats.spill_bytes += store.bytes_written
+                    stats.spill_chunk_bytes = store.max_chunk_bytes
+                    stats.spill_peak_bytes = spill_state["meter"].peak
+                else:
+                    totals, sd, sp, sr = shuffle_reduce_device(
+                        jobs, concat_mapped([mapped[k] for k in range(K)]),
+                        P, stats, mesh)
+            else:
+                hs = [host_items[k] for k in range(K)]
+                items_all = (hs[0] if len(hs) == 1
+                             else np.concatenate(hs, axis=0))
+                totals, sd, sp, sr = host_shuffle_reduce(jobs, items_all,
+                                                         stats, mesh)
+            agg.add(sd, sp, sr)
+            summary = sd
         else:
-            hs = [host_items[k] for k in range(K)]
-            items_all = hs[0] if len(hs) == 1 else np.concatenate(hs, axis=0)
-            totals, sd, sp, sr = host_shuffle_reduce(jobs, items_all, stats,
-                                                     mesh)
-        agg.add(sd, sp, sr)
-        summary = sd
-    else:
-        t0 = time.perf_counter()
-        totals = jax.block_until_ready(state["acc"])
-        stats.combine_wall_s += time.perf_counter() - t0
-        summary = agg.summary()
+            t0 = time.perf_counter()
+            totals = jax.block_until_ready(state["acc"])
+            stats.combine_wall_s += time.perf_counter() - t0
+            summary = agg.summary()
+    finally:
+        if spill_state is not None and spill_state["store"] is not None:
+            spill_state["store"].close()
     agg.finish(stats)
     stats.n_items = state["raw_items"]
     stats.map_bytes = state["raw_bytes"]
@@ -921,7 +1221,8 @@ def run_job_streaming(job, source: SplitSource, *, mesh=None,
                       prefetch: int = 2, straggler_monitor=None,
                       n_lanes: int = 1, speculate=None, chaos=None,
                       max_retries: int = 0, retry_backoff_s: float = 0.05,
-                      deadline_s: float | None = None) -> JobResult:
+                      deadline_s: float | None = None,
+                      spill=None) -> JobResult:
     """Stream one job over a ``SplitSource``. -> JobResult(output, stats)."""
     return run_jobs_streaming([job], source, mesh=mesh, engine=engine,
                               combiner=combiner, prefetch=prefetch,
@@ -929,4 +1230,4 @@ def run_job_streaming(job, source: SplitSource, *, mesh=None,
                               n_lanes=n_lanes, speculate=speculate,
                               chaos=chaos, max_retries=max_retries,
                               retry_backoff_s=retry_backoff_s,
-                              deadline_s=deadline_s)[0]
+                              deadline_s=deadline_s, spill=spill)[0]

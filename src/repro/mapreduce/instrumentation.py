@@ -65,6 +65,17 @@ class StageStats:
     combine_wall_s: float = 0.0        # cross-split combine of partials
     overlap_hidden_s: float = 0.0      # prefetch work hidden under compute
     splits: tuple = ()                 # per-split record dicts (see executor)
+    # external shuffle (disk spill): wire streams written to / read back from
+    # the spill store when the accumulated mapped splits exceed the budget.
+    # spill_wall_s is the EXPOSED spill I/O (flush waits + read-back waits
+    # the executor actually blocked on; async write time hidden under map
+    # compute lands in overlap_hidden_s like any other hidden I/O)
+    spill_bytes: int = 0               # wire bytes written to spill segments
+    spill_wall_s: float = 0.0          # exposed spill write + read-back wall
+    spilled_splits: int = 0            # splits whose streams went to disk
+    spill_peak_bytes: int = 0          # max resident wire bytes observed
+    spill_chunk_bytes: int = 0         # largest single spill chunk written
+    spill_ranges: int = 0              # partition ranges streamed back
     # lane execution (concurrent splits + speculative re-execution): with
     # n_lanes > 1 the per-stage walls above are SUMS over lanes that ran
     # concurrently, so ``elapsed_s`` carries the true end-to-end wall
@@ -81,6 +92,7 @@ class StageStats:
                      "shuffle_wire_bytes", "shuffle_raw_bytes",
                      "reduce_wall_s", "reduce_flops", "reduce_bytes",
                      "fetch_wall_s", "combine_wall_s", "overlap_hidden_s",
+                     "spill_bytes", "spill_wall_s", "spilled_splits",
                      "speculated", "clone_wins", "retries")
 
     def merge_from(self, other: "StageStats") -> "StageStats":
@@ -100,7 +112,8 @@ class StageStats:
     @property
     def wall_s(self) -> float:
         return (self.map_wall_s + self.shuffle_wall_s + self.reduce_wall_s
-                + self.fetch_wall_s + self.combine_wall_s)
+                + self.fetch_wall_s + self.combine_wall_s
+                + self.spill_wall_s)
 
     @property
     def run_wall_s(self) -> float:
@@ -128,14 +141,17 @@ class StageStats:
         """Which stage dominated wall time (the paper's per-task breakdown)."""
         times = {"map": self.map_wall_s, "shuffle": self.shuffle_wall_s,
                  "reduce": self.reduce_wall_s, "fetch": self.fetch_wall_s,
-                 "combine": self.combine_wall_s}
+                 "combine": self.combine_wall_s, "spill": self.spill_wall_s}
         return max(times, key=times.get)
 
     def roofline(self, chips: int = 1) -> RooflineTerms:
-        """Recast as three-resource roofline terms (Amdahl-number analysis)."""
+        """Recast as three-resource roofline terms (Amdahl-number analysis).
+        Spilled bytes cross the memory boundary twice (write + read back),
+        the paper's disk term folded into the HBM analogue."""
         return RooflineTerms.from_stage_bytes(
             flops=self.reduce_flops,
-            hbm_bytes=self.map_bytes + self.reduce_bytes,
+            hbm_bytes=self.map_bytes + self.reduce_bytes
+            + 2 * self.spill_bytes,
             wire_bytes=self.shuffle_wire_bytes,
             chips=chips)
 

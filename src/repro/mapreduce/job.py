@@ -818,7 +818,10 @@ def _shuffle_mapped(partitioner: Partitioner, codec: ShuffleCodec, tile: int,
     t0 = time.perf_counter()
     keys_h = np.asarray(jax.block_until_ready(m.keys))
     dest_h = np.asarray(m.dest_eff)
-    n_owned = np.bincount(keys_h, minlength=P).astype(np.int64)
+    # keys == P marks payload-only rows (carried for the bucket entries that
+    # reference them — spilled range reads use this for cross-range border
+    # rows); like dest == P they are excluded from owned counts/scatter.
+    n_owned = np.bincount(keys_h, minlength=P + 1)[:P].astype(np.int64)
     n_bucket = np.bincount(dest_h, minlength=P + 1)[:P].astype(np.int64)
     plan = plan_tiers(n_owned, n_bucket, tile, pad_partitions_to=D)
     part_tier = np.full(P + 1, -1, np.int32)
@@ -929,6 +932,77 @@ def shuffle_reduce_device(jobs, m: MappedSplit, P: int, stats: StageStats,
                           j0.reducer.pad_value, m, P, stats, mesh)
     totals = cat.reduce_totals(tuple(j.reducer for j in jobs), stats)
     return totals, cat.sd, cat.shard_pad, cat.shard_real
+
+
+@dataclasses.dataclass
+class StreamSummary:
+    """Aggregate post-shuffle state of a streaming run — what
+    ``Reducer.finalize`` sees instead of a materialized ``ShuffledData``.
+    ``n_owned``/``n_bucket`` are per-partition counts SUMMED over splits (or
+    stitched over partition ranges), so count-based corrections (self-pair
+    removal etc.) work unchanged."""
+
+    n_owned: np.ndarray        # [P] int64
+    n_bucket: np.ndarray       # [P] int64
+    pair_cells: float = 0.0
+    owned_cells: float = 0.0
+    real_pair_cells: float = 0.0
+
+    @property
+    def padded_ratio(self) -> float:
+        return (self.pair_cells / self.real_pair_cells
+                if self.real_pair_cells else 1.0)
+
+
+def shuffle_reduce_device_streamed(jobs, ranges, P: int, stats: StageStats,
+                                   mesh=None):
+    """Shuffle + reduce an ENTRY STREAM of partition ranges — the external
+    shuffle's read-back path. ``ranges`` yields ``(lo, hi, m)`` records
+    covering disjoint ``[lo, hi)`` slices of the global partition space,
+    where ``m`` is a ``MappedSplit`` whose ids are RANGE-LOCAL: keys in
+    ``[0, hi-lo)`` for rows the range owns (``hi-lo`` marks payload-only
+    border rows carried for bucket entries), ``dest_eff`` in ``[0, hi-lo]``.
+
+    Each range runs the ordinary ``shuffle_reduce_device`` with
+    ``P = hi - lo`` — peak resident wire bytes are one range's, not the
+    catalog's — and per-job totals tree-add across ranges (disjoint owned
+    partitions + commutative integer sums, the same contract that makes
+    ``concat_mapped`` order-independent). Per-partition counts stitch into
+    global ``[P]`` vectors so finalize corrections see the monolithic view.
+
+    -> (per-job totals, StreamSummary over all ranges, shard_pad,
+    shard_real) — the ``shuffle_reduce_device`` return shape with the
+    summary standing in for ``DeviceShuffledData``.
+    """
+    totals = None
+    n_owned = np.zeros(P, np.int64)
+    n_bucket = np.zeros(P, np.int64)
+    pair_pad = pair_real = owned_cells = 0.0
+    shard_pad = shard_real = None
+    for lo, hi, m in ranges:
+        t, sd, sp, sr = shuffle_reduce_device(jobs, m, hi - lo, stats, mesh)
+        totals = t if totals is None else tuple(
+            jax.tree.map(jnp.add, a, b) for a, b in zip(totals, t))
+        n_owned[lo:hi] += sd.n_owned
+        n_bucket[lo:hi] += sd.n_bucket
+        pair_pad += sd.pair_cells
+        pair_real += sd.real_pair_cells
+        owned_cells += sd.owned_cells
+        if shard_pad is None:
+            shard_pad = np.asarray(sp, np.float64).copy()
+            shard_real = np.asarray(sr, np.float64).copy()
+        else:
+            shard_pad += sp
+            shard_real += sr
+    if totals is None:
+        raise ValueError("shuffle_reduce_device_streamed: empty range "
+                         "stream — the caller must supply at least one "
+                         "range (an all-empty spill still reads one)")
+    stats.n_partitions = P
+    summary = StreamSummary(n_owned, n_bucket, pair_cells=pair_pad,
+                            owned_cells=owned_cells,
+                            real_pair_cells=pair_real)
+    return totals, summary, shard_pad, shard_real
 
 
 def host_shuffle_reduce(jobs, items, stats: StageStats, mesh=None):

@@ -183,6 +183,42 @@ def test_lane_death_requeues_and_shrinks():
     assert len(chaos.deaths) == 1
 
 
+@pytest.mark.timeout_s(300)
+def test_lane_killed_mid_spill_write_retries_to_parity(tmp_path):
+    """PR8 chaos case: a lane dies mid-spill-segment-write. The torn staged
+    segment is length-invalid (never committed, swept later), the split is
+    retried on the survivors, and the spilled run stays bit-identical to
+    the monolithic oracle — spill staging rides the existing retry ladder."""
+    import tempfile
+
+    from repro.mapreduce import SpillConfig
+
+    xyz = _catalog()
+    job = neighbor_search_job(RADIUS, tile=128)
+    want = run_job(job, xyz).output
+    state = {"n": 0, "torn": None}
+    lock = threading.Lock()
+
+    def kill_second_write(path):
+        with lock:
+            state["n"] += 1
+            if state["n"] == 2:
+                state["torn"] = path
+                raise OSError("lane died mid-spill-write")
+
+    root = tempfile.mkdtemp(prefix="chaos-spill-")
+    res = run_job_streaming(
+        job, ArraySplits(xyz, n_splits=6), n_lanes=3, max_retries=2,
+        retry_backoff_s=0.01,
+        spill=SpillConfig(budget_bytes=0, dir=root,
+                          write_fault=kill_second_write))
+    assert res.output == want
+    assert res.stats.retries >= 1                 # the death was retried
+    assert state["torn"] is not None and ".staged-" in state["torn"]
+    assert res.stats.spilled_splits == 6          # all splits spilled in the end
+    assert not os.path.exists(root)               # segments reclaimed
+
+
 @pytest.mark.timeout_s(120)
 def test_deadline_raises_instead_of_hanging():
     xyz = _catalog(800)

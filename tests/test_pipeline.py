@@ -178,3 +178,98 @@ def test_prefetcher_clean_stop_clears_thread():
     with pf as p:
         assert p.get()[1] == 0
     assert pf._thread is None           # joined and cleared, no leak
+
+
+def test_prefetcher_exhaustion_latches():
+    """PR8 satellite: get() after the terminal None used to block forever on
+    the empty queue (dead worker); the terminal state must latch and
+    re-surface on every subsequent call."""
+    with Prefetcher(lambda k: k, depth=2, n=2) as pf:
+        assert pf.get()[1] == 0
+        assert pf.get()[1] == 1
+        for _ in range(3):              # every call after the end: None again
+            assert pf.get() is None
+
+
+def test_prefetcher_error_latches():
+    """Same latch for producer exceptions: each get() after the first raise
+    re-raises the same error instead of hanging."""
+    def boom(k):
+        raise ValueError("segment write failed")
+    with Prefetcher(boom, n=3) as pf:
+        for _ in range(3):
+            with pytest.raises(ValueError, match="segment write failed"):
+                pf.get()
+
+
+def test_prefetcher_stop_wakes_blocked_consumer():
+    """A consumer blocked in get() on an empty queue must wake with None when
+    stop() is called from another thread, not sleep forever."""
+    import threading
+    import time
+
+    release = threading.Event()
+
+    def produce(k):
+        release.wait(20.0)              # nothing ever arrives until teardown
+        return k
+
+    pf = Prefetcher(produce, depth=1, n=2).start()
+    out = {}
+
+    def consume():
+        out["rec"] = pf.get()
+
+    t = threading.Thread(target=consume, daemon=True)
+    t.start()
+    time.sleep(0.1)                     # consumer is now blocked in get()
+    assert t.is_alive()
+    with pytest.raises(RuntimeError):   # worker is wedged -> named error
+        pf.stop(timeout=0.3)
+    t.join(timeout=5.0)
+    assert not t.is_alive()             # ...but the consumer DID wake
+    assert out["rec"] is None
+    release.set()
+    pf._thread.join(timeout=5.0)
+
+
+def test_prefetcher_drain_keeps_inflight_item():
+    """PR8 satellite: stop() racing a full queue used to drop the worker's
+    in-flight produced item on the floor. stop(drain=True) must let the
+    hand-off finish and return every undelivered record."""
+    import time
+
+    produced = []
+
+    def produce(k):
+        produced.append(k)
+        return np.full((3,), k, np.int64)
+
+    pf = Prefetcher(produce, depth=1, n=2).start()
+    deadline = time.perf_counter() + 5.0
+    while len(produced) < 2 and time.perf_counter() < deadline:
+        time.sleep(0.01)                # item 0 queued, item 1 stuck in _put
+    assert produced == [0, 1]
+    drained = pf.stop(drain=True)
+    ks = [rec[0] for rec in drained if isinstance(rec, tuple)]
+    assert ks == [0, 1]                 # nothing produced was lost
+    assert drained[1][1][0] == 1
+    assert pf._thread is None
+
+
+def test_memmap_catalog_splits_rejects_trailing_bytes(tmp_path):
+    """PR8 satellite: a catalog file whose size is not a multiple of d*4 was
+    silently truncated by the row-count floor-division; it must refuse with
+    an error naming the file and the remainder."""
+    rows = np.arange(12, dtype=np.float32).reshape(4, 3)
+    path = str(tmp_path / "cat.f32")
+    MemmapCatalogSplits.write(path, rows)
+    with open(path, "ab") as f:
+        f.write(b"\x00" * 5)            # torn write: 5 trailing bytes
+    with pytest.raises(ValueError, match=r"5 trailing bytes") as ei:
+        MemmapCatalogSplits(path, d=3, rows_per_split=2)
+    assert "cat.f32" in str(ei.value)
+    # the untampered file still loads fine
+    ok = str(tmp_path / "ok.f32")
+    MemmapCatalogSplits.write(ok, rows)
+    assert MemmapCatalogSplits(ok, d=3, rows_per_split=2).n_splits() == 2
