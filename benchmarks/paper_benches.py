@@ -661,6 +661,83 @@ def fig7_spill():
     return rows
 
 
+def fig8_autoplan():
+    """Cost-model auto planning (``tile="auto"``/``codec="auto"``) vs the
+    hand-tuned fig3/table3 configurations, paired rows per workload. Bit
+    identity auto == hand is asserted internally (auto only moves shapes,
+    never arithmetic); the auto >= hand TIMING gate lives in
+    ``scripts/bench_diff.py --auto-gate`` over these rows, with the
+    skewed-catalog pair required to be strictly faster — the workload where
+    hand-tuned ``tile=256`` pays every small zone's padding and the
+    predicted-wall planner does not. ``prederr`` in the derived field is
+    ``StageStats.prediction_error`` (worst predicted-vs-actual stage-wall
+    ratio; analytic-defaults backends are expected to be loose — the <=2x
+    bound is a calibrated-backend property)."""
+    from repro.data import SyntheticTokens, sky
+    from repro.mapreduce import (neighbor_search_job, neighbor_statistics_job,
+                                 run_job, token_histogram_job)
+    rows = []
+
+    def bench_pair(suffix, hand_job, auto_job, items, eq):
+        res = {}
+        for kind, job in (("hand", hand_job), ("auto", auto_job)):
+            run_job(job, items)                  # warmup (compile caches)
+            r = min((run_job(job, items) for _ in range(5)),
+                    key=lambda r: r.stats.wall_s)
+            res[kind] = r
+            st = r.stats
+            rows.append((f"fig8_{kind}_{suffix}", st.wall_s * 1e6,
+                         f"tile={st.auto_tile or job.tile}"
+                         f"_codec={st.codec}"
+                         f"_padratio={st.reduce_padded_ratio:.2f}"
+                         f"_prederr={st.prediction_error:.2f}"))
+        assert eq(res["auto"].output, res["hand"].output), (
+            suffix, res["auto"].output, res["hand"].output)
+        return res
+
+    # fig3-equivalent rows: the hand configs are fig3/table3's tuned picks
+    xyz = sky.make_catalog(20000, 0)
+    radius = 0.02
+    bench_pair("search",
+               neighbor_search_job(radius, tile=64),
+               neighbor_search_job(radius, tile="auto", codec="auto"),
+               xyz, lambda a, b: int(a) == int(b))
+    edges = np.linspace(0.005, 0.04, 8)
+    bench_pair("stats",
+               neighbor_statistics_job(edges / sky.ARCSEC, tile=256),
+               neighbor_statistics_job(edges / sky.ARCSEC, tile="auto",
+                                       codec="auto"),
+               xyz, lambda a, b: np.array_equal(a, b))
+    toks = SyntheticTokens(50000, 0).block(0, 64, 1024)
+    bench_pair("wordcount",
+               token_histogram_job(50000, n_partitions=16, tile=256),
+               token_histogram_job(50000, n_partitions=16, tile="auto",
+                                   codec="auto"),
+               toks.reshape(-1), lambda a, b: np.array_equal(a, b))
+
+    # skewed catalog: 60% of the tokens come from a 50-token hot set that
+    # hashes into a handful of giant partitions; the rest spread uniformly.
+    # tile=256 (the fig3 "bigger blocks" hand pick) pads every small
+    # partition toward the giants' quantum, and wordcount's bincount reduce
+    # pays that padding DIRECTLY (no z-gap pruning rescues it like the
+    # blocked pair engine does) — the rows-basis predicted-wall planner
+    # must win outright here, not just tie.
+    srng = np.random.default_rng(5)
+    nskew = 120_000
+    hot = srng.integers(0, 50, int(nskew * 0.6))
+    cold = srng.integers(0, 50000, nskew - len(hot))
+    skew_toks = srng.permutation(np.concatenate([hot, cold]))
+    pair = bench_pair("skew",
+                      token_histogram_job(50000, n_partitions=16, tile=256),
+                      token_histogram_job(50000, n_partitions=16,
+                                          tile="auto", codec="auto"),
+                      skew_toks, lambda a, b: np.array_equal(a, b))
+    assert pair["auto"].stats.wall_s < pair["hand"].stats.wall_s, (
+        "auto planning must beat hand tile=256 on the skewed catalog",
+        pair["auto"].stats.wall_s, pair["hand"].stats.wall_s)
+    return rows
+
+
 ALL = [fig1_direct_io, table2_network, fig2_pipeline, fig3_improvements,
        fig4_streaming, fig5_service, fig6_speculation, fig7_spill,
-       table3_apps, table4_amdahl]
+       fig8_autoplan, table3_apps, table4_amdahl]

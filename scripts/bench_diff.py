@@ -9,6 +9,16 @@ flagged and make the script exit 1, so CI can gate on it:
 
 Rows with a zero/absent timing on either side (derived-only rows like
 table2, rows that disappeared) are reported but never gate.
+
+``--auto-gate FILE`` is a second mode: within ONE snapshot, every
+``fig8_auto_<suffix>`` row is compared against its ``fig8_hand_<suffix>``
+twin. Auto-planned configurations must be no slower than the hand-tuned
+ones (auto/hand <= ``--auto-threshold``, default 1.10 for timing noise);
+the ``skew`` row must be STRICTLY faster — that catalog is the case the
+hand tile provably mis-sizes, so auto merely tying would mean the planner
+learned nothing:
+
+    python scripts/bench_diff.py --auto-gate BENCH_pr9.json
 """
 from __future__ import annotations
 
@@ -46,15 +56,62 @@ def diff(old: dict[str, float], new: dict[str, float], *, prefix: str = "",
     return lines, regressions
 
 
+def auto_gate(rows: dict[str, float], *, threshold: float = 1.10,
+              strict_suffixes: tuple[str, ...] = ("skew",)):
+    """-> (report_lines, violations) comparing fig8_auto_* vs fig8_hand_*."""
+    suffixes = sorted(n[len("fig8_auto_"):] for n in rows
+                      if n.startswith("fig8_auto_"))
+    lines, violations = [], []
+    if not suffixes:
+        return ["no fig8_auto_* rows found"], [("fig8_auto_*", 0.0)]
+    for s in suffixes:
+        auto, hand = rows.get(f"fig8_auto_{s}"), rows.get(f"fig8_hand_{s}")
+        if not auto or not hand:
+            lines.append(f"fig8_{s:34s} missing hand twin")
+            violations.append((f"fig8_{s}", 0.0))
+            continue
+        ratio = auto / hand
+        strict = s in strict_suffixes
+        bound = 1.0 if strict else threshold
+        ok = ratio < bound if strict else ratio <= bound
+        flag = "" if ok else (f"  AUTO SLOWER (need {'<' if strict else '<='}"
+                              f" {bound:.2f}x)")
+        if not ok:
+            violations.append((f"fig8_{s}", ratio))
+        lines.append(f"fig8_{s:10s} auto {auto:10.1f} vs hand {hand:10.1f} us"
+                     f"  ({ratio:5.2f}x){'  [strict]' if strict else ''}"
+                     f"{flag}")
+    return lines, violations
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("old", help="baseline BENCH_*.json")
-    ap.add_argument("new", help="candidate BENCH_*.json")
+    ap.add_argument("old", nargs="?", help="baseline BENCH_*.json")
+    ap.add_argument("new", nargs="?", help="candidate BENCH_*.json")
     ap.add_argument("--prefix", default="",
                     help="only compare rows whose name starts with this")
     ap.add_argument("--threshold", type=float, default=1.15,
                     help="flag rows slower than this new/old ratio")
+    ap.add_argument("--auto-gate", metavar="FILE",
+                    help="gate fig8 auto-vs-hand rows within one snapshot")
+    ap.add_argument("--auto-threshold", type=float, default=1.10,
+                    help="auto/hand ratio bound for non-strict fig8 rows")
     args = ap.parse_args()
+
+    if args.auto_gate:
+        lines, violations = auto_gate(load_rows(args.auto_gate),
+                                      threshold=args.auto_threshold)
+        print(f"auto-plan gate: {args.auto_gate}")
+        for ln in lines:
+            print("  " + ln)
+        if violations:
+            print(f"{len(violations)} auto-plan violation(s)")
+            return 1
+        print("auto plans hold up against hand tuning")
+        return 0
+
+    if not args.old or not args.new:
+        ap.error("old and new snapshots are required unless --auto-gate")
     lines, regressions = diff(load_rows(args.old), load_rows(args.new),
                               prefix=args.prefix, threshold=args.threshold)
     print(f"bench diff: {args.old} -> {args.new}"

@@ -1,0 +1,440 @@
+"""HLO-calibrated cost model: predicted stage walls drive planning knobs.
+
+The paper's argument is a balance calculation — measure where cycles and
+bytes go, then size the system so no knob is the accidental bottleneck.
+This module replaces the hand-tuned planning constants with that loop:
+
+1. **Census** (`stage_census`): jit + lower + compile a stage callable at
+   abstract shapes and run the `hlo_analysis` census over the optimized HLO
+   — analytic dot-FLOPs, elementwise FLOPs and HBM bytes per candidate
+   configuration. The pair kernels are unrolled broadcast sums (the bit
+   parity contract forbids `dot_general`), so their arithmetic shows up in
+   ``ew_flops``, not ``flops``.
+2. **Calibration** (`CostModel.calibrate`): a short one-time replay of five
+   micro-shapes of the blocked chunk kernel, timed with the same
+   warmup/best-of-N convention as ``benchmarks/paper_benches._t``, fitted to
+   ``wall ~= flops/F + bytes/B + dispatch`` and cached on disk per backend
+   fingerprint (backend | device kind | jax version | cpu count). The replay
+   NEVER runs implicitly: plain ``get_cost_model()`` loads the disk cache if
+   the fingerprint matches and otherwise falls back to analytic per-backend
+   defaults, so planning never poisons bench timings. Calibration is skipped
+   outright (analytic defaults, ``calibrated=False``) when the process has
+   <2 CPUs or ``REPRO_NO_CALIBRATE=1``.
+3. **Prediction** (`predict_stage_wall`, `argmin`): seconds per stage from
+   the fitted rates, and an argmin planner over candidate configurations.
+
+Consumers: ``plan_tiers(tier_cost=...)`` (predicted tier walls instead of
+padded-cell counts), the blocked engine's chunk shape
+(``REPRO_AUTO_CHUNK=1``), ``codec="auto"``/``tile="auto"`` job knobs, split
+row sizing and the spill tier's range count. Every auto path only changes
+shapes/choices, never arithmetic — auto-planned runs are bit-identical to
+manual configs for exact codecs (masked kernels handle any geometry).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.hlo_analysis import HLOAnalysis, analyze_hlo
+
+# Analytic per-backend default rates used when no calibration is available:
+# (effective flop/s, effective HBM bytes/s, per-dispatch overhead seconds).
+# They only need to RANK candidate shapes sensibly; absolute accuracy is a
+# calibrated-backend property (the <=2x acceptance bound applies there).
+DEFAULT_RATES = {
+    "cpu": (2.0e10, 1.0e10, 5.0e-5),
+    "gpu": (1.0e13, 8.0e11, 1.5e-5),
+    "tpu": (2.0e13, 8.0e11, 5.0e-6),
+}
+
+# Calibration micro-shapes: (tm, tn, b0) chunk geometries of the blocked
+# pair kernel. The first is tiny (dispatch-overhead anchor); the rest span
+# the candidate chunk space the auto chunk chooser ranks over.
+CALIBRATION_SHAPES = ((8, 8, 8), (32, 32, 256), (64, 64, 256),
+                      (64, 64, 512), (128, 128, 512))
+
+DEFAULT_CHUNK = (64, 64, 512)      # the hand-tuned blocked chunk shape
+TILE_CANDIDATES = (64, 128, 256, 512)
+# fixed per-tier dispatch chain charged under the "rows" cost basis: each
+# tier is its own decode + reduce + accumulator-output sequence, and for
+# linear reducers that overhead dominates the (tiny) arithmetic saved
+_TIER_DISPATCHES = 8.0
+
+
+def backend_fingerprint() -> str:
+    import jax
+    dev = jax.devices()[0]
+    kind = getattr(dev, "device_kind", "unknown")
+    return (f"{jax.default_backend()}|{kind}|jax{jax.__version__}"
+            f"|cpus{os.cpu_count() or 1}")
+
+
+def calibration_enabled() -> bool:
+    """Replay is allowed: >=2 CPUs and not opted out via env."""
+    if os.environ.get("REPRO_NO_CALIBRATE") == "1":
+        return False
+    return (os.cpu_count() or 1) >= 2
+
+
+def cache_dir() -> str:
+    return (os.environ.get("REPRO_CACHE_DIR")
+            or os.path.join(os.path.expanduser("~"), ".cache", "repro"))
+
+
+def cache_path(fingerprint: str) -> str:
+    tag = hashlib.sha1(fingerprint.encode()).hexdigest()[:12]
+    return os.path.join(cache_dir(), f"cost_model-{tag}.json")
+
+
+@dataclasses.dataclass(frozen=True)
+class StageCost:
+    """Analytic cost of one stage configuration (census units)."""
+    flops: float                 # dot + elementwise FLOPs
+    hbm_bytes: float = 0.0
+    n_dispatch: float = 1.0
+
+    @classmethod
+    def from_analysis(cls, a: HLOAnalysis, n_dispatch: float = 1.0):
+        return cls(a.flops + a.ew_flops, a.hbm_bytes, n_dispatch)
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendProfile:
+    """Effective rates for one backend fingerprint."""
+    fingerprint: str
+    flops_per_s: float
+    bytes_per_s: float
+    dispatch_s: float
+    calibrated: bool = False
+    # per-probe replay rows: (tm, tn, b0, wall_s, flops, hbm_bytes)
+    probes: tuple = ()
+
+
+def stage_census(fn, *args) -> HLOAnalysis:
+    """Compile ``fn`` at the given (abstract or concrete) arguments and run
+    the HLO census over the optimized module."""
+    import jax
+    hlo = jax.jit(fn).lower(*args).compile().as_text()
+    return analyze_hlo(hlo)
+
+
+def _time(fn, *args, reps: int = 5, warmup: int = 2) -> float:
+    """Seconds per call, same convention as ``paper_benches._t``: ``warmup``
+    untimed calls (compile + cache warm), then the mean of ``reps``."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def _probe_args(tm: int, tn: int, b0: int, seed: int = 0):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((b0, tm, 3)).astype(np.float32)
+    b = rng.standard_normal((b0, tn, 3)).astype(np.float32)
+    a /= np.linalg.norm(a, axis=-1, keepdims=True)
+    b /= np.linalg.norm(b, axis=-1, keepdims=True)
+    na = np.full(b0, tm, np.int32)
+    nb = np.full(b0, tn, np.int32)
+    return (jnp.asarray(a), jnp.asarray(b), jnp.asarray(na), jnp.asarray(nb),
+            jnp.float32(0.99))
+
+
+def _run_replay(shapes=CALIBRATION_SHAPES):
+    """Measure + census the blocked chunk kernel at the micro-shapes.
+    Returns probe rows (tm, tn, b0, wall_s, flops, hbm_bytes)."""
+    from repro.kernels.zones_pairs.blocked import _count_chunk
+    rows = []
+    for (tm, tn, b0) in shapes:
+        args = _probe_args(tm, tn, b0)
+        wall = _time(_count_chunk, *args)
+        a = stage_census(_count_chunk, *args)
+        rows.append((tm, tn, b0, float(wall),
+                     float(a.flops + a.ew_flops), float(a.hbm_bytes)))
+    return tuple(rows)
+
+
+def _fit_profile(fingerprint: str, probes) -> BackendProfile:
+    """wall ~= flops/F + bytes/B + c, nonnegative. The tiny anchor probe
+    pins the dispatch overhead; a least-squares fit over the residuals gives
+    the rates, with a single-rate fallback if the fit goes non-positive."""
+    walls = np.array([p[3] for p in probes], np.float64)
+    flops = np.array([p[4] for p in probes], np.float64)
+    byts = np.array([p[5] for p in probes], np.float64)
+    dispatch = float(max(walls.min(), 1e-7))
+    resid = np.maximum(walls - dispatch, 1e-9)
+    big = flops > flops.min()       # drop the anchor from the rate fit
+    if big.sum() >= 2:
+        A = np.stack([flops[big], byts[big]], axis=1)
+        coef, *_ = np.linalg.lstsq(A, resid[big], rcond=None)
+    else:
+        coef = np.zeros(2)
+    if coef[0] <= 0 or coef[1] <= 0:
+        # degenerate fit: charge everything to both rates proportionally
+        per = resid.sum()
+        coef = np.array([per / max(flops.sum(), 1.0),
+                         per / max(byts.sum(), 1.0)])
+    return BackendProfile(fingerprint, 1.0 / float(coef[0]),
+                          1.0 / float(coef[1]), dispatch,
+                          calibrated=True, probes=tuple(probes))
+
+
+def _default_profile(fingerprint: str) -> BackendProfile:
+    backend = fingerprint.split("|", 1)[0]
+    f, b, d = DEFAULT_RATES.get(backend, DEFAULT_RATES["cpu"])
+    return BackendProfile(fingerprint, f, b, d, calibrated=False)
+
+
+def _load_cached(fingerprint: str) -> BackendProfile | None:
+    path = cache_path(fingerprint)
+    try:
+        with open(path) as fh:
+            d = json.load(fh)
+    except (OSError, ValueError):
+        return None
+    if d.get("fingerprint") != fingerprint:   # stale: backend changed
+        return None
+    try:
+        return BackendProfile(
+            d["fingerprint"], float(d["flops_per_s"]),
+            float(d["bytes_per_s"]), float(d["dispatch_s"]),
+            calibrated=True,
+            probes=tuple(tuple(p) for p in d.get("probes", ())))
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
+def _save_cache(profile: BackendProfile) -> None:
+    os.makedirs(cache_dir(), exist_ok=True)
+    path = cache_path(profile.fingerprint)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump({"fingerprint": profile.fingerprint,
+                   "flops_per_s": profile.flops_per_s,
+                   "bytes_per_s": profile.bytes_per_s,
+                   "dispatch_s": profile.dispatch_s,
+                   "probes": [list(p) for p in profile.probes]}, fh)
+    os.replace(tmp, path)
+
+
+class CostModel:
+    """Predicted stage walls + argmin planning over one backend profile."""
+
+    def __init__(self, profile: BackendProfile):
+        self.profile = profile
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def load(cls, calibrate: bool = False) -> "CostModel":
+        fp = backend_fingerprint()
+        prof = _load_cached(fp)
+        if prof is None and calibrate and calibration_enabled():
+            prof = _fit_profile(fp, _run_replay())
+            _save_cache(prof)
+        if prof is None:
+            prof = _default_profile(fp)
+        return cls(prof)
+
+    def calibrate(self) -> "CostModel":
+        """Force the replay (subject to the skip guards) and re-fit."""
+        fp = backend_fingerprint()
+        if not calibration_enabled():
+            return CostModel(_default_profile(fp))
+        prof = _fit_profile(fp, _run_replay())
+        _save_cache(prof)
+        self.profile = prof
+        return self
+
+    # -- prediction ---------------------------------------------------------
+
+    def predict_wall(self, cost: StageCost) -> float:
+        p = self.profile
+        return (cost.flops / p.flops_per_s + cost.hbm_bytes / p.bytes_per_s
+                + cost.n_dispatch * p.dispatch_s)
+
+    def predict_stage_wall(self, config, *args) -> float:
+        """Seconds for one stage configuration. ``config`` may be a
+        ``StageCost``, an ``HLOAnalysis``, or a stage callable (censused at
+        ``*args``)."""
+        if callable(config):
+            config = StageCost.from_analysis(stage_census(config, *args))
+        elif isinstance(config, HLOAnalysis):
+            config = StageCost.from_analysis(config)
+        return self.predict_wall(config)
+
+    def argmin(self, candidates):
+        """``candidates``: iterable of (key, StageCost). Returns the
+        (key, predicted_wall) pair with the smallest wall; first wins ties."""
+        best = None
+        for key, cost in candidates:
+            w = self.predict_wall(cost)
+            if best is None or w < best[1]:
+                best = (key, w)
+        if best is None:
+            raise ValueError("argmin over no candidates")
+        return best
+
+    # -- consumer choosers --------------------------------------------------
+
+    def tier_cost_fn(self, *, d: int = 3, basis: str = "pairs",
+                     flops_per_cell: float = 8.0,
+                     bytes_per_cell: float = 4.0):
+        """Vectorized ``f(Pt, C1, C2) -> predicted tier walls`` for
+        ``plan_tiers(tier_cost=...)``. Phantom shards stay charged because
+        Pt is the padded partition count.
+
+        ``basis`` follows the reducer's declared ``cost_basis``:
+
+        - ``"pairs"`` (cross-row reducers): work is quadratic in the padded
+          score cells (Pt*C1*C2) plus input HBM traffic and per-chunk
+          dispatch overhead.
+        - ``"rows"`` (monoid/bincount-style reducers): work is LINEAR in
+          the padded owned rows (Pt*C1) — tiering buys almost no arithmetic
+          back, so each extra tier is mostly its fixed dispatch-chain
+          overhead (decode + reduce + accumulator output). The per-tier
+          constant makes the planner prefer few tiers / coarse tiles here.
+        """
+        p = self.profile
+        ctm, ctn, cb0 = DEFAULT_CHUNK
+        chunk_cells = float(ctm * ctn * cb0)
+
+        def cost(Pt, C1, C2):
+            Pt = np.asarray(Pt, np.float64)
+            C1 = np.asarray(C1, np.float64)
+            C2 = np.asarray(C2, np.float64)
+            io_bytes = Pt * (C1 + C2) * d * 4.0
+            if basis == "rows":
+                rows = Pt * C1
+                flops = rows * 4.0
+                ndisp = np.maximum(rows / chunk_cells, 1.0) + _TIER_DISPATCHES
+                return (flops / p.flops_per_s + io_bytes / p.bytes_per_s
+                        + ndisp * p.dispatch_s)
+            cells = Pt * C1 * C2
+            flops = cells * flops_per_cell
+            byts = cells * bytes_per_cell + io_bytes
+            ndisp = np.maximum(cells / chunk_cells, 1.0)
+            return (flops / p.flops_per_s + byts / p.bytes_per_s
+                    + ndisp * p.dispatch_s)
+
+        return cost
+
+    def plan_shuffle(self, n_owned, n_bucket, pad_partitions_to: int = 1,
+                     *, d: int = 3, basis: str = "pairs", max_tiers: int = 3,
+                     candidates=TILE_CANDIDATES):
+        """Pick (tile, tier plan) minimizing the predicted reduce wall.
+        Each candidate tile is planned with the predicted-wall tier cost
+        (``basis`` per the reducer's ``cost_basis`` — see ``tier_cost_fn``);
+        ties keep the earliest candidate. Returns (tile, plan, wall_s)."""
+        from repro.mapreduce.job import plan_tiers
+        f = self.tier_cost_fn(d=d, basis=basis)
+        best = None
+        for tile in candidates:
+            plan = plan_tiers(n_owned, n_bucket, tile, max_tiers=max_tiers,
+                              pad_partitions_to=pad_partitions_to,
+                              tier_cost=f)
+            Pt = np.array([-(-len(ids) // pad_partitions_to)
+                           * pad_partitions_to for ids, _, _ in plan])
+            C1 = np.array([c1 for _, c1, _ in plan])
+            C2 = np.array([c2 for _, _, c2 in plan])
+            wall = float(np.sum(f(Pt, C1, C2)))
+            if best is None or wall < best[2]:
+                best = (tile, plan, wall)
+        return best
+
+    def choose_codec(self, *, d: int = 3, candidates=None,
+                     n_items: float = 1e6) -> str:
+        """Exact codecs only — codec choice must never change arithmetic.
+        Ranked by predicted shuffle wire traffic + decode cost."""
+        from repro.mapreduce.codecs import available_codecs, get_codec
+        names = candidates if candidates is not None else available_codecs()
+        exact = [n for n in names if get_codec(n).exact]
+        if not exact:
+            raise ValueError("no exact codec available for codec='auto'")
+        key, _ = self.argmin(
+            (n, StageCost(
+                flops=0.0 if n == "identity" else 2.0 * n_items * d,
+                hbm_bytes=3.0 * n_items
+                * get_codec(n).device_bytes_per_item(d)))
+            for n in exact)
+        return key
+
+    def choose_blocked_chunk(self, default=DEFAULT_CHUNK):
+        """(TM, TN, B0) for the blocked engine. With calibration probes:
+        rank measured per-cell walls amortized over a nominal workload (the
+        replay-measured tile chooser); otherwise keep the hand-tuned
+        default — on an uncalibrated backend the model has no basis to
+        deviate."""
+        probes = [p for p in self.profile.probes
+                  if p[0] * p[1] * p[2] >= 32 * 32 * 256]   # skip the anchor
+        if not self.profile.calibrated or not probes:
+            return default
+        W = float(2 ** 27)        # nominal score cells per partition pair
+        disp = self.profile.dispatch_s
+
+        def wall(p):
+            tm, tn, b0, w, _, _ = p
+            cells = float(tm * tn * b0)
+            return W * (w / cells) + np.ceil(W / cells) * disp
+
+        best = min(probes, key=wall)
+        if wall(best) >= wall(next((p for p in probes
+                                    if tuple(p[:3]) == default), best)):
+            return default        # ties / default measured best: keep it
+        return (int(best[0]), int(best[1]), int(best[2]))
+
+    def choose_split_rows(self, n_rows: int, *, d: int = 3,
+                          bytes_per_row: float | None = None,
+                          max_split_bytes: float = 128e6) -> int:
+        """Rows per split for streaming: large enough that per-split fixed
+        overhead (~8 dispatches) stays under ~5% of the per-split wall,
+        small enough that a split's raw bytes fit the working-set cap."""
+        p = self.profile
+        bpr = bytes_per_row if bytes_per_row is not None else 4.0 * d
+        row_wall = 3.0 * bpr / p.bytes_per_s + 8.0 * d / p.flops_per_s
+        fixed = 8.0 * p.dispatch_s
+        lo = int(np.ceil(20.0 * fixed / max(row_wall, 1e-18)))
+        hi = max(int(max_split_bytes / max(bpr, 1.0)), 1)
+        return int(np.clip(min(lo, hi), 1, max(n_rows, 1)))
+
+    def choose_spill_ranges(self, est_total_bytes: float,
+                            budget_bytes: float, P: int,
+                            max_ranges: int = 256) -> int:
+        """Smallest range count whose per-range read-back fits inside half
+        the budget (the spill runtime's flush watermark); fewer ranges mean
+        fewer replans, each costing fixed overhead."""
+        cap = max(1, min(int(P), int(max_ranges)))
+        half = max(budget_bytes / 2.0, 1.0)
+        need = int(np.ceil(max(est_total_bytes, 0.0) / half))
+        return int(np.clip(need, 1, cap))
+
+
+_MODEL_CACHE: dict[str, CostModel] = {}
+
+
+def get_cost_model(calibrate: bool | None = None) -> CostModel:
+    """Process-cached model for the current backend. ``calibrate=None``
+    (default) never runs the replay — it loads the disk cache when the
+    fingerprint matches, else analytic defaults. Pass ``calibrate=True`` (or
+    set ``REPRO_CALIBRATE=1``) to run the one-time replay (still subject to
+    the <2-CPU / ``REPRO_NO_CALIBRATE`` guards)."""
+    want = bool(calibrate) or os.environ.get("REPRO_CALIBRATE") == "1"
+    fp = backend_fingerprint()
+    m = _MODEL_CACHE.get(fp)
+    if m is None or (want and not m.profile.calibrated):
+        m = CostModel.load(calibrate=want)
+        _MODEL_CACHE[fp] = m
+    return m
+
+
+def reset_cost_model() -> None:
+    """Drop process-cached models (tests; does not touch the disk cache)."""
+    _MODEL_CACHE.clear()

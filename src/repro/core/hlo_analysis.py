@@ -65,6 +65,19 @@ def _shape_bytes(sig: str) -> int:
     return total
 
 
+def _shape_elems(sig: str) -> int:
+    """Element count of the first shape in a result signature."""
+    m = _SHAPE_RE.search(sig)
+    if not m:
+        return 0
+    n = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+    return n
+
+
 def _dot_flops(result_sig: str, operands: str) -> float:
     """FLOPs of a dot from result shape x contraction size (2*M*N*K).
 
@@ -114,6 +127,12 @@ class HLOAnalysis:
     coll_count: int
     op_count: int
     while_trips: dict
+    # elementwise FLOPs: one per output element of each arithmetic op (plus
+    # reduce input elements), counted inside fusions like dot FLOPs. Kept
+    # separate from ``flops`` so the dot-only semantics stay stable — the
+    # pair kernels are unrolled broadcast sums with zero dots, and the cost
+    # model needs their arithmetic visible.
+    ew_flops: float = 0.0
 
     def summary(self) -> dict:
         by_op: dict[str, float] = defaultdict(float)
@@ -121,6 +140,7 @@ class HLOAnalysis:
             by_op[c.op] += c.wire_bytes
         return {
             "flops_per_device": self.flops,
+            "ew_flops_per_device": self.ew_flops,
             "hbm_bytes_per_device": self.hbm_bytes,
             "coll_wire_intra_per_device": self.coll_wire_intra,
             "coll_wire_cross_per_device": self.coll_wire_cross,
@@ -168,6 +188,10 @@ _ELEMENTWISE = {
     "atan2", "rem", "shift-left", "shift-right-logical",
     "shift-right-arithmetic", "is-finite", "popcnt", "clz",
 }
+# Arithmetic elementwise ops counted toward ``ew_flops`` (one per output
+# element). ``convert`` is movement, not arithmetic, so it is excluded.
+_ARITH_EW = _ELEMENTWISE - {"convert"}
+
 _SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
              "while", "call", "conditional", "after-all", "custom-call",
              "copy-start", "copy-done", "partition-id", "replica-id",
@@ -223,6 +247,7 @@ def analyze_hlo(hlo_text: str, *, pod_size: int = 0) -> HLOAnalysis:
     _OPERAND_RE = re.compile(r"%([\w.\-]+)")
     for name, lines in comps.items():
         flops = 0.0
+        ew = 0.0
         bytes_ = 0.0
         colls: list[tuple[str, float, int, int, bool, str]] = []
         nops = 0
@@ -267,6 +292,10 @@ def analyze_hlo(hlo_text: str, *, pod_size: int = 0) -> HLOAnalysis:
             opnds = operand_sigs(rest)
             in_bytes = sum(_shape_bytes(s) for s in opnds)
             out_bytes = _shape_bytes(rsig)
+            if op in _ARITH_EW:
+                ew += _shape_elems(rsig)
+            elif op in ("reduce", "reduce-window"):
+                ew += sum(_shape_elems(s) for s in opnds)
             if op == "dot":
                 flops += _dot_flops(rsig, " ".join(opnds) + " " + rest)
                 bytes_ += in_bytes + out_bytes
@@ -313,8 +342,8 @@ def analyze_hlo(hlo_text: str, *, pod_size: int = 0) -> HLOAnalysis:
             elif op == "fusion" or op not in _SKIP_OPS:
                 # HBM traffic model: operands + result cross HBM per fusion/op
                 bytes_ += in_bytes + out_bytes
-        stats[name] = {"flops": flops, "bytes": bytes_, "colls": colls,
-                       "nops": nops}
+        stats[name] = {"flops": flops, "ew": ew, "bytes": bytes_,
+                       "colls": colls, "nops": nops}
 
     # propagate multipliers from entry: (flops multiplier, bytes multiplier)
     multf: dict[str, float] = defaultdict(float)
@@ -332,6 +361,7 @@ def analyze_hlo(hlo_text: str, *, pod_size: int = 0) -> HLOAnalysis:
         visit(entry, 1.0, 1.0)
 
     total_flops = 0.0
+    total_ew = 0.0
     total_bytes = 0.0
     coll_list: list[Collective] = []
     wire_intra = wire_cross = 0.0
@@ -344,6 +374,7 @@ def analyze_hlo(hlo_text: str, *, pod_size: int = 0) -> HLOAnalysis:
         if mf <= 0 and mb <= 0:
             continue
         total_flops += st["flops"] * mf
+        total_ew += st["ew"] * mf
         total_bytes += st["bytes"] * mb
         nops += int(st["nops"] * mb)
         for (op, wire, payload, R, cross, line) in st["colls"]:
@@ -357,7 +388,7 @@ def analyze_hlo(hlo_text: str, *, pod_size: int = 0) -> HLOAnalysis:
             else:
                 wire_intra += wire * m
     return HLOAnalysis(total_flops, total_bytes, coll_list, wire_intra,
-                       wire_cross, ncoll, nops, trips)
+                       wire_cross, ncoll, nops, trips, ew_flops=total_ew)
 
 
 # Back-compat helpers -------------------------------------------------------

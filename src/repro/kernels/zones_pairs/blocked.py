@@ -23,11 +23,15 @@ property-checked in ``tests/test_kernels.py``.
 Chunk geometry: TM=TN=64 rows (falls back to the largest divisor of the
 capacity), B0=512 blocks per chunk — ~2M score cells per dispatch, enough
 to amortize dispatch overhead while keeping the [B0, TM, TN] score tensor
-inside the L2-ish working set.
+inside the L2-ish working set. ``chunk_shape()`` resolves the shape per
+run: ``set_chunk_shape`` override > ``REPRO_AUTO_CHUNK=1`` (the cost
+model's calibrated replay-measured choice) > these constants. Results are
+bit-identical for every shape.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +44,32 @@ TM = 64           # tile rows (owned side)
 TN = 64           # tile rows (bucket side)
 B0 = 512          # blocks per kernel dispatch (fixed -> one compile)
 _SLACK = 1e-3     # covers f32 rounding in dots/ranges/threshold
+
+# chunk-shape resolution: hand-tuned module constants by default; an explicit
+# override (tests / power users) wins; REPRO_AUTO_CHUNK=1 asks the cost
+# model, which only deviates from the hand-tuned shape when its calibration
+# replay measured a faster one. Any shape is exact — tiles are masked and
+# ``_fit_tile`` handles every capacity — so this changes speed, never bits.
+_CHUNK_OVERRIDE: "tuple[int, int, int] | None" = None
+
+
+def set_chunk_shape(tm: int | None = None, tn: int | None = None,
+                    b0: int | None = None) -> None:
+    """Force a (TM, TN, B0) chunk shape; ``set_chunk_shape()`` resets to
+    the default resolution order."""
+    global _CHUNK_OVERRIDE
+    _CHUNK_OVERRIDE = (None if tm is None
+                       else (int(tm), int(tn or tm), int(b0 or B0)))
+
+
+def chunk_shape() -> "tuple[int, int, int]":
+    """The (TM, TN, B0) the blocked engine will use for the next run."""
+    if _CHUNK_OVERRIDE is not None:
+        return _CHUNK_OVERRIDE
+    if os.environ.get("REPRO_AUTO_CHUNK") == "1":
+        from repro.core.cost_model import get_cost_model
+        return get_cost_model().choose_blocked_chunk(default=(TM, TN, B0))
+    return (TM, TN, B0)
 
 
 @jax.jit
@@ -85,13 +115,14 @@ def _tile_ranges(x, n_rows, *, gm, tm):
     return zmin, zmax, mn2
 
 
-def _plan_blocks(a, b, n_a, n_b, cos_min):
+def _plan_blocks(a, b, n_a, n_b, cos_min, tm0=None, tn0=None):
     """-> (a_tile_idx, b_tile_idx, na_blk, nb_blk) numpy arrays of surviving
     tile pairs, plus (gm, tm, gn, tn). Empty tiles and z-gap-pruned tile
     pairs are dropped."""
     P, C1, _ = a.shape
     C2 = b.shape[1]
-    tm, tn = _fit_tile(C1, TM), _fit_tile(C2, TN)
+    tm = _fit_tile(C1, TM if tm0 is None else tm0)
+    tn = _fit_tile(C2, TN if tn0 is None else tn0)
     gm, gn = C1 // tm, C2 // tn
     azmin, azmax, amn2, bzmin, bzmax, bmn2 = jax.device_get(
         _tile_ranges(a, n_a, gm=gm, tm=tm)
@@ -126,22 +157,23 @@ def _gather_blocks(x, idx, g, t):
 
 
 def _run_blocked(a, b, n_a, n_b, cos_min, chunk_fn, chunk_arg, out0):
+    tm0, tn0, b0 = chunk_shape()
     ai, bi, na_blk, nb_blk, (gm, tm, gn, tn) = _plan_blocks(
-        a, b, n_a, n_b, cos_min)
+        a, b, n_a, n_b, cos_min, tm0, tn0)
     nblk = len(ai)
     if not nblk:              # everything pruned or empty
         return out0
-    pad = (-nblk) % B0
+    pad = (-nblk) % b0
     if pad:   # padded blocks point at tile 0 with zero-row masks
         z = np.zeros(pad, np.int32)
         ai, bi = np.concatenate([ai, z]), np.concatenate([bi, z])
         na_blk, nb_blk = (np.concatenate([na_blk, z]),
                           np.concatenate([nb_blk, z]))
-    nchunks = (nblk + pad) // B0
-    A = _gather_blocks(a, ai, gm, tm).reshape(nchunks, B0, tm, -1)
-    B = _gather_blocks(b, bi, gn, tn).reshape(nchunks, B0, tn, -1)
-    na_d = jnp.asarray(na_blk).reshape(nchunks, B0)
-    nb_d = jnp.asarray(nb_blk).reshape(nchunks, B0)
+    nchunks = (nblk + pad) // b0
+    A = _gather_blocks(a, ai, gm, tm).reshape(nchunks, b0, tm, -1)
+    B = _gather_blocks(b, bi, gn, tn).reshape(nchunks, b0, tn, -1)
+    na_d = jnp.asarray(na_blk).reshape(nchunks, b0)
+    nb_d = jnp.asarray(nb_blk).reshape(nchunks, b0)
     out = out0
     for k in range(nchunks):   # dynamic index: one compiled slice per shape
         out = out + chunk_fn(*_pick_chunk(A, B, na_d, nb_d, jnp.int32(k)),

@@ -85,6 +85,12 @@ class StageStats:
     clone_wins: int = 0                # splits where the clone finished first
     retries: int = 0                   # transient-fault re-dispatches
     lane_walls: tuple = ()             # per-lane busy seconds, length n_lanes
+    # cost-model accounting (core/cost_model.py): the predicted stage walls
+    # recorded alongside the measured ones, so model error is observable in
+    # every bench row, and the tile the model resolved when tile="auto"
+    predicted_shuffle_wall_s: float = 0.0
+    predicted_reduce_wall_s: float = 0.0
+    auto_tile: int = 0                 # 0 = tile was not auto-planned
 
     # per-stage accumulator fields that add across per-split / per-lane
     # partial StageStats when lanes merge their local stats into the shared one
@@ -93,7 +99,8 @@ class StageStats:
                      "reduce_wall_s", "reduce_flops", "reduce_bytes",
                      "fetch_wall_s", "combine_wall_s", "overlap_hidden_s",
                      "spill_bytes", "spill_wall_s", "spilled_splits",
-                     "speculated", "clone_wins", "retries")
+                     "speculated", "clone_wins", "retries",
+                     "predicted_shuffle_wall_s", "predicted_reduce_wall_s")
 
     def merge_from(self, other: "StageStats") -> "StageStats":
         """Fold a per-split/per-lane partial ``StageStats`` into this one:
@@ -103,11 +110,23 @@ class StageStats:
         so concurrent lanes never mutate the shared stats mid-stage."""
         for f in self._ACCUM_FIELDS:
             setattr(self, f, getattr(self, f) + getattr(other, f))
-        for f in ("n_partitions", "n_shards", "shuffle_index_impl"):
+        for f in ("n_partitions", "n_shards", "shuffle_index_impl",
+                  "auto_tile"):
             mine = getattr(self, f)
             if mine in (0, 1, ""):
                 setattr(self, f, getattr(other, f))
         return self
+
+    @property
+    def prediction_error(self) -> float:
+        """Worst predicted-vs-actual stage-wall ratio, folded to >= 1.0
+        (a 2.0 means the cost model was off by 2x in either direction on
+        some stage); 0.0 when no prediction was recorded."""
+        errs = [max(p / a, a / p) for p, a in
+                ((self.predicted_shuffle_wall_s, self.shuffle_wall_s),
+                 (self.predicted_reduce_wall_s, self.reduce_wall_s))
+                if p > 0.0 and a > 0.0]
+        return max(errs) if errs else 0.0
 
     @property
     def wall_s(self) -> float:
@@ -160,7 +179,8 @@ class StageStats:
              for f in dataclasses.fields(self)}
         d.update(wall_s=self.wall_s, dominant_stage=self.dominant_stage,
                  compression_ratio=self.compression_ratio,
-                 overlap_fraction=self.overlap_fraction)
+                 overlap_fraction=self.overlap_fraction,
+                 prediction_error=self.prediction_error)
         d["amdahl"] = self.roofline(chips).to_dict()
         return d
 

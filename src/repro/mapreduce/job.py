@@ -154,6 +154,13 @@ class Reducer:
 
     pad_value: float = 0.0   # fill for capacity padding; pick one kernels ignore
 
+    # cost-model basis for tile="auto" planning (class attr, not a field):
+    # "pairs" = work quadratic in score cells (cross-row reducers);
+    # "rows"  = work linear in owned rows (monoid/bincount reducers), where
+    # extra tiers are mostly fixed overhead. Never affects results — only
+    # which tile/tier split the planner predicts fastest.
+    cost_basis = "pairs"
+
     def per_partition(self, owned_p, bucket_p):
         """[C1, d], [C2, d] -> fixed-shape array, summed over partitions."""
         raise NotImplementedError
@@ -296,13 +303,30 @@ class DeviceShuffledData(_PaddingAccounting):
 
 @dataclasses.dataclass
 class MapReduceJob:
-    """A named composition of the three pluggable stages."""
+    """A named composition of the three pluggable stages.
+
+    ``codec="auto"`` / ``tile="auto"`` delegate the choice to the cost
+    model (``core/cost_model.py``): codec resolves at job entry (exact
+    codecs only, so arithmetic never changes), tile at shuffle time when
+    the per-partition counts are known. Both default to the historical
+    concrete values — auto is opt-in."""
 
     name: str
     partitioner: Partitioner
     reducer: Reducer
     codec: str | ShuffleCodec = "identity"
-    tile: int = 256            # capacity quantum (the paper's block size)
+    tile: int | str = 256      # capacity quantum (the paper's block size)
+
+
+def resolve_auto_job(job: MapReduceJob) -> MapReduceJob:
+    """Materialize ``codec="auto"`` via the cost model. Exact codecs only —
+    auto choices change shapes, never arithmetic. ``tile="auto"`` stays on
+    the job: it resolves inside ``_shuffle_mapped`` where the per-partition
+    counts exist."""
+    if job.codec == "auto":
+        from repro.core.cost_model import get_cost_model
+        job = dataclasses.replace(job, codec=get_cost_model().choose_codec())
+    return job
 
 
 @dataclasses.dataclass
@@ -328,7 +352,16 @@ def shuffle_stage(items, partitioner: Partitioner, codec="identity", *,
     copy is ever materialized just for accounting. Wire bytes count every
     point that lands in a bucket (owned + border copies), matching the
     paper's "bytes that crossed the shuffle" accounting.
+
+    ``codec="auto"`` resolves through the cost model; ``tile="auto"`` takes
+    the historical host default (the host engine's results are tile-
+    independent — padding is masked — so there is nothing to plan).
     """
+    if codec == "auto":
+        from repro.core.cost_model import get_cost_model
+        codec = get_cost_model().choose_codec()
+    if tile == "auto":
+        tile = 256
     codec = get_codec(codec)
     items = np.asarray(items)
     if items.ndim == 1:
@@ -408,7 +441,7 @@ def reduce_stage(reducers, sd: ShuffledData, mesh=None):
 # ---------------------------------------------------------------------------
 
 def plan_tiers(n_owned, n_bucket, tile: int, max_tiers: int = 3,
-               pad_partitions_to: int = 1):
+               pad_partitions_to: int = 1, tier_cost=None):
     """Group partitions into <= ``max_tiers`` capacity size classes.
 
     One global capacity (the host engine's choice) is sized by the most
@@ -416,8 +449,13 @@ def plan_tiers(n_owned, n_bucket, tile: int, max_tiers: int = 3,
     — the fig3 ``bigger_blocks`` inversion. Tiers bound that: partitions are
     grouped by bucket capacity (rounded to the ``tile`` quantum) and each
     tier is padded only to ITS max. The <=2 split points are chosen by
-    exhaustive search over distinct capacities, minimizing total padded
-    pair cells sum(P_t * C1_t * C2_t).
+    exact search over distinct capacities, minimizing total tier cost.
+
+    ``tier_cost``: optional vectorized callable ``f(Pt, C1, C2) -> cost``
+    over float64 numpy arrays (``Pt`` = phantom-padded partition count) —
+    e.g. the cost model's predicted tier wall
+    (``CostModel.tier_cost_fn()``). Default: padded pair cells
+    ``Pt * C1 * C2``, bit-identical to the historical planner.
 
     ``pad_partitions_to`` (the mesh's ``data`` axis size): each tier's
     partition count is rounded up to a multiple of it with phantom
@@ -425,35 +463,92 @@ def plan_tiers(n_owned, n_bucket, tile: int, max_tiers: int = 3,
     cost search charges those phantom rows, so under a wide mesh the
     planner leans toward fewer, fuller tiers.
 
+    The search is a vectorized scan over the O(U^2) segment-cost table of
+    unique capacities (the old ``itertools.combinations`` python loop was
+    O(U choose 2) cost evaluations — minutes at U=500), with an early-exit
+    bound: any prefix tier already costing >= the incumbent best prunes
+    every deeper split under it.
+
     -> list of (part_ids ascending, C1, C2) per tier (part_ids are REAL
     partitions only; the engine appends the phantoms).
     """
     n_owned = np.asarray(n_owned, np.int64)
     n_bucket = np.asarray(n_bucket, np.int64)
+    pad = pad_partitions_to
     caps = np.array([_round_up(int(c), tile) for c in n_bucket], np.int64)
     uniq = np.unique(caps)
+    U = len(uniq)
 
-    def cost_and_tiers(thresholds):
-        cost, tiers, lo = 0.0, [], -1
-        for th in thresholds:
+    def build(cut_ids):
+        tiers, lo = [], -1
+        for th in (int(uniq[i]) for i in cut_ids):
             sel = np.flatnonzero((caps > lo) & (caps <= th))
             lo = th
-            if not len(sel):
-                continue
-            C1 = _round_up(int(n_owned[sel].max()), tile)
-            cost += float(_round_up(len(sel), pad_partitions_to)) * C1 * th
-            tiers.append((sel, C1, int(th)))
-        return cost, tiers
+            if len(sel):
+                tiers.append((sel, _round_up(int(n_owned[sel].max()), tile),
+                              th))
+        return tiers
 
-    import itertools
-    best = cost_and_tiers([int(uniq[-1])])
-    for k in range(2, min(max_tiers, len(uniq)) + 1):
-        for cut in itertools.combinations(range(len(uniq) - 1), k - 1):
-            cand = cost_and_tiers([int(uniq[i]) for i in cut]
-                                  + [int(uniq[-1])])
-            if cand[0] < best[0]:
-                best = cand
-    return best[1]
+    # Segment-cost table: S[i, j] = cost of one tier covering uniq[i..j]
+    # (inclusive; +inf below the diagonal). Costs are exact in float64 —
+    # padded-cell counts are integers far below 2**53 — so argmin over S
+    # reproduces the python accumulation bit-for-bit.
+    ui = np.searchsorted(uniq, caps)
+    maxo = np.zeros(U, np.int64)
+    np.maximum.at(maxo, ui, n_owned)
+    pc = np.concatenate([[0], np.cumsum(np.bincount(ui, minlength=U))])
+    row = np.arange(U)[:, None]
+    col = np.arange(U)[None, :]
+    seg_max = np.maximum.accumulate(
+        np.where(col >= row, maxo[None, :], 0), axis=1)
+    cnt = pc[1:][None, :] - pc[:-1][:, None]
+    Pt = np.maximum(pad, -(-cnt // pad) * pad).astype(np.float64)
+    C1 = np.maximum(tile, -(-seg_max // tile) * tile).astype(np.float64)
+    C2 = np.broadcast_to(uniq.astype(np.float64)[None, :], (U, U))
+    if tier_cost is None:
+        S = Pt * C1 * C2
+    else:
+        S = np.asarray(tier_cost(Pt, C1, C2), np.float64)
+    S = np.where(col >= row, S, np.inf)
+
+    best_cost = float(S[0, U - 1])
+    best_cuts = (U - 1,)
+    if max_tiers >= 2 and U >= 2:
+        two = S[0, :U - 1] + S[1:, U - 1]
+        c = int(np.argmin(two))          # first occurrence = lexicographic
+        if two[c] < best_cost:
+            best_cost, best_cuts = float(two[c]), (c, U - 1)
+    if max_tiers >= 3 and U >= 3:
+        a = S[0, :U - 2]                 # prefix tier ending at cut c1
+        keep = a < best_cost             # early-exit bound: prefix alone
+        if keep.any():                   # >= incumbent prunes the row
+            T = ((a[:, None] + S[1:U - 1, 1:U - 1])
+                 + S[2:, U - 1][None, :])
+            r2 = np.arange(U - 2)
+            T = np.where((r2[:, None] <= r2[None, :]) & keep[:, None],
+                         T, np.inf)
+            flat = int(np.argmin(T))
+            c1, c2 = divmod(flat, U - 2)
+            if T[c1, c2] < best_cost:
+                best_cost = float(T[c1, c2])
+                best_cuts = (c1, c2 + 1, U - 1)
+    if max_tiers > 3 and U > 3:
+        # deeper splits are rare; exact DFS with the same early-exit bound
+        kmax = min(max_tiers, U)
+
+        def dfs(i0, cuts, prefix):
+            nonlocal best_cost, best_cuts
+            if prefix >= best_cost:
+                return
+            close = prefix + S[i0, U - 1]
+            if close < best_cost:
+                best_cost, best_cuts = float(close), tuple(cuts) + (U - 1,)
+            if len(cuts) + 2 <= kmax:
+                for c in range(i0, U - 1):
+                    dfs(c + 1, cuts + [c], prefix + S[i0, c])
+
+        dfs(0, [], 0.0)
+    return build(best_cuts)
 
 
 @functools.partial(jax.jit, static_argnames=("specs", "has_skey"))
@@ -734,6 +829,7 @@ class ResidentCatalog:
     n_rows: int = 0
     d: int = 0
     load_stats: StageStats = None      # the shuffle-once cost (set by shuffle_once)
+    tile_resolved: int = 0             # concrete tile when ``tile == "auto"``
 
     @property
     def nbytes(self) -> int:
@@ -778,7 +874,17 @@ class ResidentCatalog:
         totals = jax.block_until_ready(totals)
         stats.reduce_wall_s += time.perf_counter() - t0
         stats.reduce_bytes += self.nbytes
-        stats.reduce_flops += float(sum(r.flops(self.sd) for r in reducers))
+        flops = float(sum(r.flops(self.sd) for r in reducers))
+        stats.reduce_flops += flops
+        # predicted reduce wall from the same accounting the stats carry:
+        # reducer flops + decoded score cells and resident wire traffic
+        from repro.core.cost_model import StageCost, get_cost_model
+        cells = self.sd.pair_cells
+        stats.predicted_reduce_wall_s += get_cost_model().predict_wall(
+            StageCost(flops=flops,
+                      hbm_bytes=4.0 * cells * len(reducers) + self.nbytes,
+                      n_dispatch=max(cells / (64.0 * 64.0 * 512.0), 1.0)
+                      * len(self.sd.tiers)))
         return totals
 
     def run(self, jobs, stats: StageStats = None) -> "list[JobResult]":
@@ -804,15 +910,24 @@ class ResidentCatalog:
                 for j, t in zip(jobs, totals)]
 
 
-def _shuffle_mapped(partitioner: Partitioner, codec: ShuffleCodec, tile: int,
+def _shuffle_mapped(partitioner: Partitioner, codec: ShuffleCodec, tile,
                     pad_value: float, m: MappedSplit, P: int,
-                    stats: StageStats, mesh=None) -> ResidentCatalog:
+                    stats: StageStats, mesh=None,
+                    cost_basis: str = "pairs") -> ResidentCatalog:
     """Shuffle one mapped stream into device-resident tiers: count, tier,
     argsort-bucket, scatter in wire dtype — the shuffle half of
     ``shuffle_reduce_device``, accumulating (``+=``) into ``stats``. Tier
     partition counts are padded to a multiple of the mesh's data axis size
     with phantom (zero-count) partitions, so every tier splits evenly
-    across shards. -> ResidentCatalog."""
+    across shards.
+
+    ``tile="auto"`` asks the cost model for the tile quantum AND the tier
+    split minimizing the predicted reduce wall (instead of padded-cell
+    count); the resolved tile lands in ``stats.auto_tile`` and
+    ``ResidentCatalog.tile_resolved``. Either way the predicted shuffle
+    wall is recorded so model error is observable per stage.
+    -> ResidentCatalog."""
+    from repro.core.cost_model import StageCost, get_cost_model
     D = _data_axis_size(mesh)
     d = m.d
     t0 = time.perf_counter()
@@ -823,7 +938,13 @@ def _shuffle_mapped(partitioner: Partitioner, codec: ShuffleCodec, tile: int,
     # rows); like dest == P they are excluded from owned counts/scatter.
     n_owned = np.bincount(keys_h, minlength=P + 1)[:P].astype(np.int64)
     n_bucket = np.bincount(dest_h, minlength=P + 1)[:P].astype(np.int64)
-    plan = plan_tiers(n_owned, n_bucket, tile, pad_partitions_to=D)
+    tile_req = tile
+    if tile == "auto":
+        tile, plan, _ = get_cost_model().plan_shuffle(n_owned, n_bucket, D,
+                                                      d=d, basis=cost_basis)
+        stats.auto_tile = int(tile)
+    else:
+        plan = plan_tiers(n_owned, n_bucket, tile, pad_partitions_to=D)
     part_tier = np.full(P + 1, -1, np.int32)
     part_local = np.zeros(P + 1, np.int32)
     specs = []
@@ -868,21 +989,28 @@ def _shuffle_mapped(partitioner: Partitioner, codec: ShuffleCodec, tile: int,
         shard_pad += float(Pt // D) * C1 * C2
     sd = DeviceShuffledData(tiers, n_owned, n_bucket)
     n_shuffled = int(n_bucket.sum())
+    wire = n_shuffled * codec.device_bytes_per_item(d)
     stats.shuffle_wall_s += time.perf_counter() - t0
-    stats.shuffle_wire_bytes += n_shuffled * codec.device_bytes_per_item(d)
+    stats.shuffle_wire_bytes += wire
     stats.shuffle_raw_bytes += 4 * n_shuffled * d
+    # predicted shuffle wall: the sort/scatter is byte-bound — payload rows
+    # make ~3 passes and the index stream ~16B per shuffled row
+    stats.predicted_shuffle_wall_s += get_cost_model().predict_wall(
+        StageCost(flops=0.0, hbm_bytes=3.0 * wire + 16.0 * n_shuffled,
+                  n_dispatch=len(plan) + 2))
     stats.n_items += m.n_rows
     stats.n_partitions = P
     stats.codec = codec.name
     stats.engine = "device"
     stats.n_shards = D
-    return ResidentCatalog(partitioner, codec, tile, pad_value, sd, P,
+    return ResidentCatalog(partitioner, codec, tile_req, pad_value, sd, P,
                            mesh=mesh, shard_pad=shard_pad,
-                           shard_real=shard_real, n_rows=m.n_rows, d=d)
+                           shard_real=shard_real, n_rows=m.n_rows, d=d,
+                           tile_resolved=int(tile))
 
 
 def shuffle_once(partitioner: Partitioner, items, *, codec="identity",
-                 tile: int = 256, pad_value: float = 0.0, mesh=None,
+                 tile: int | str = 256, pad_value: float = 0.0, mesh=None,
                  stats: StageStats = None) -> ResidentCatalog:
     """Load + map + shuffle a catalog ONCE into device-resident tiered
     wire-dtype partitions. The returned handle's ``run(jobs)`` serves any
@@ -890,6 +1018,9 @@ def shuffle_once(partitioner: Partitioner, items, *, codec="identity",
     shuffle-then-reduce decomposition that ``run_jobs`` executes per call
     and the MR query service amortizes across requests. The shuffle cost
     lands in ``stats`` (also kept as ``ResidentCatalog.load_stats``)."""
+    if codec == "auto":
+        from repro.core.cost_model import get_cost_model
+        codec = get_cost_model().choose_codec()
     codec = get_codec(codec)
     if stats is None:
         stats = StageStats(job="shuffle_once")
@@ -929,7 +1060,9 @@ def shuffle_reduce_device(jobs, m: MappedSplit, P: int, stats: StageStats,
     """
     j0 = jobs[0]
     cat = _shuffle_mapped(j0.partitioner, get_codec(j0.codec), j0.tile,
-                          j0.reducer.pad_value, m, P, stats, mesh)
+                          j0.reducer.pad_value, m, P, stats, mesh,
+                          cost_basis=getattr(j0.reducer, "cost_basis",
+                                             "pairs"))
     totals = cat.reduce_totals(tuple(j.reducer for j in jobs), stats)
     return totals, cat.sd, cat.shard_pad, cat.shard_real
 
@@ -1089,8 +1222,8 @@ def validate_batch(jobs) -> None:
                 f"from {j0.name!r} in {', '.join(diffs)}")
 
 
-def run_jobs(jobs, items, *, mesh=None, engine: str = "auto"
-             ) -> list[JobResult]:
+def run_jobs(jobs, items, *, mesh=None, engine: str = "auto",
+             split_rows=None) -> list[JobResult]:
     """Execute several jobs that share partitioner/codec/tile through ONE
     map+shuffle and one fused reduce pass (e.g. Neighbor Searching and
     Neighbor Statistics over the same catalog cost a single data pass).
@@ -1106,14 +1239,29 @@ def run_jobs(jobs, items, *, mesh=None, engine: str = "auto"
     tier partials combine with a psum), ``"host"`` (numpy shuffle +
     ``lax.map`` reduce; the oracle-parity path, on or off mesh), or
     ``"auto"`` (always device — both engines shard over any data-axis
-    mesh). -> one JobResult per job, sharing a single StageStats."""
+    mesh). -> one JobResult per job, sharing a single StageStats.
+
+    ``split_rows``: ``None`` (default) runs the whole catalog as one split;
+    an int streams it in row chunks of that size; ``"auto"`` asks the cost
+    model for a chunk size that amortizes per-split dispatch overhead while
+    bounding the working set. Streaming is bit-identical to monolithic for
+    exact codecs, so this only changes shapes, never results."""
     from repro.data.pipeline import ArraySplits
     from repro.mapreduce.executor import run_jobs_streaming
-    return run_jobs_streaming(jobs, ArraySplits(items), mesh=mesh,
-                              engine=engine, combiner=None, prefetch=0)
+    rows = np.asarray(items)
+    if split_rows == "auto":
+        from repro.core.cost_model import get_cost_model
+        d = rows.shape[1] if rows.ndim > 1 else 1
+        split_rows = get_cost_model().choose_split_rows(len(rows), d=d)
+    n_splits = (1 if split_rows is None
+                else max(1, -(-len(rows) // int(split_rows))))
+    return run_jobs_streaming(jobs, ArraySplits(items, n_splits=n_splits),
+                              mesh=mesh, engine=engine, combiner=None,
+                              prefetch=0)
 
 
-def run_job(job: MapReduceJob, items, *, mesh=None, engine: str = "auto"
-            ) -> JobResult:
+def run_job(job: MapReduceJob, items, *, mesh=None, engine: str = "auto",
+            split_rows=None) -> JobResult:
     """Execute one job end-to-end. -> JobResult(output, stats)."""
-    return run_jobs([job], items, mesh=mesh, engine=engine)[0]
+    return run_jobs([job], items, mesh=mesh, engine=engine,
+                    split_rows=split_rows)[0]

@@ -73,12 +73,13 @@ class SpillConfig:
     ``0`` spills every split. ``dir``: spill root (a fresh temp dir when
     None; always reclaimed on close). ``n_ranges``: read-back partition
     range count (None = sized so a range's wire bytes fit well inside the
-    budget, capped at ``max_ranges``). ``write_fault``: chaos hook
-    ``f(path)`` invoked mid-segment-write (fault injection for tests)."""
+    budget, capped at ``max_ranges``; ``"auto"`` = the cost model picks the
+    fewest ranges whose read-back fits the flush watermark). ``write_fault``:
+    chaos hook ``f(path)`` invoked mid-segment-write (fault injection)."""
 
     budget_bytes: float | None = None
     dir: str | None = None
-    n_ranges: int | None = None
+    n_ranges: int | str | None = None
     max_ranges: int = 256
     write_fault: object = None
 

@@ -1,0 +1,348 @@
+"""Cost model: calibration/cache plumbing, predictors, auto-knob identity.
+
+Two contracts matter most and get property checks here:
+
+1. **Bit identity** — every ``"auto"`` knob (codec/tile/split_rows/chunk
+   shape) may change SHAPES and CHOICES, never arithmetic: auto results
+   equal manual results exactly, on both engines.
+2. **Planner parity** — the vectorized ``plan_tiers`` is
+   behavior-identical to the original exhaustive ``itertools.combinations``
+   search (copied verbatim below as the oracle), including tie-breaks, and
+   stays fast at pathological unique-capacity counts.
+"""
+import dataclasses
+import itertools
+import json
+import time
+
+import numpy as np
+import pytest
+
+import repro.core.cost_model as cm
+from repro.core.cost_model import (BackendProfile, CostModel, StageCost,
+                                   backend_fingerprint, calibration_enabled,
+                                   get_cost_model, reset_cost_model)
+from repro.data import sky
+from repro.mapreduce import (get_codec, neighbor_search_job, plan_tiers,
+                             run_job, token_histogram_job)
+from repro.mapreduce.job import _round_up
+
+
+@pytest.fixture
+def isolated_model(monkeypatch, tmp_path):
+    """Point the disk cache at a tmp dir and drop process-cached models, so
+    tests never see (or write) the user's real calibration cache."""
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path))
+    monkeypatch.delenv("REPRO_CALIBRATE", raising=False)
+    reset_cost_model()
+    yield tmp_path
+    reset_cost_model()
+
+
+# ---------------------------------------------------------------------------
+# profiles, calibration guards, disk cache
+# ---------------------------------------------------------------------------
+
+def test_default_profile_is_analytic_and_uncalibrated(isolated_model):
+    m = get_cost_model()
+    assert not m.profile.calibrated
+    assert m.profile.fingerprint == backend_fingerprint()
+    assert m.profile.flops_per_s > 0 and m.profile.bytes_per_s > 0
+    # process cache: same object back
+    assert get_cost_model() is m
+
+
+def test_no_calibrate_env_disables_replay(isolated_model, monkeypatch):
+    monkeypatch.setenv("REPRO_NO_CALIBRATE", "1")
+    assert not calibration_enabled()
+    m = CostModel.load(calibrate=True)
+    assert not m.profile.calibrated          # replay skipped, defaults used
+
+
+SYNTH_PROBES = (
+    # (tm, tn, b0, wall_s, flops, hbm_bytes) at F=1e10, B=5e9, c=2e-5
+    (8, 8, 8, 2.01e-5, 1.0e3, 2.0e2),
+    (32, 32, 256, 2.0e-5 + 1e-2 + 2e-3, 1.0e8, 1.0e7),
+    (64, 64, 256, 2.0e-5 + 2e-2 + 4e-3, 2.0e8, 2.0e7),
+    (64, 64, 512, 2.0e-5 + 4e-2 + 6e-3, 4.0e8, 3.0e7),
+    (128, 128, 512, 2.0e-5 + 8e-2 + 1e-2, 8.0e8, 5.0e7),
+)
+
+
+def test_fit_profile_recovers_synthetic_rates():
+    p = cm._fit_profile("fp", SYNTH_PROBES)
+    assert p.calibrated and p.probes == SYNTH_PROBES
+    assert p.flops_per_s == pytest.approx(1e10, rel=0.25)
+    assert p.bytes_per_s == pytest.approx(5e9, rel=0.25)
+    # anchor probe pins dispatch near c
+    assert p.dispatch_s == pytest.approx(2.01e-5, rel=0.05)
+    # prediction round-trip on a probe the fit saw: within 2x
+    w = CostModel(p).predict_wall(StageCost(flops=4.0e8, hbm_bytes=3.0e7))
+    assert 0.5 < w / SYNTH_PROBES[3][3] < 2.0
+
+
+def test_calibration_cache_roundtrip_and_invalidation(isolated_model,
+                                                      monkeypatch):
+    monkeypatch.setattr(cm, "calibration_enabled", lambda: True)
+    monkeypatch.setattr(cm, "_run_replay", lambda: SYNTH_PROBES)
+    m = CostModel.load(calibrate=True)
+    assert m.profile.calibrated
+    path = cm.cache_path(backend_fingerprint())
+    assert json.load(open(path))["fingerprint"] == backend_fingerprint()
+
+    # a later load (no calibrate) reads the cache — replay must NOT run
+    monkeypatch.setattr(cm, "_run_replay",
+                        lambda: pytest.fail("replay ran on cached load"))
+    m2 = CostModel.load()
+    assert m2.profile.calibrated
+    assert m2.profile.probes == SYNTH_PROBES
+
+    # fingerprint mismatch (backend changed) invalidates the cache file
+    d = json.load(open(path))
+    d["fingerprint"] = "other|backend"
+    json.dump(d, open(path, "w"))
+    assert cm._load_cached(backend_fingerprint()) is None
+    assert not CostModel.load().profile.calibrated
+
+    # corrupt JSON is treated as a miss, not an error
+    open(path, "w").write("{not json")
+    assert cm._load_cached(backend_fingerprint()) is None
+
+
+# ---------------------------------------------------------------------------
+# predictors and choosers
+# ---------------------------------------------------------------------------
+
+def test_argmin_first_wins_ties(isolated_model):
+    m = get_cost_model()
+    c = StageCost(flops=1e6)
+    key, wall = m.argmin([("a", c), ("b", c), ("c", StageCost(flops=1e9))])
+    assert key == "a" and wall > 0
+    with pytest.raises(ValueError):
+        m.argmin([])
+
+
+def test_choose_codec_returns_exact(isolated_model):
+    m = get_cost_model()
+    name = m.choose_codec(d=3)
+    assert get_codec(name).exact
+    # restricting candidates to a lossy codec must fail, not fall back
+    with pytest.raises(ValueError):
+        m.choose_codec(candidates=["int8"])
+
+
+def test_predict_stage_wall_accepts_callable(isolated_model):
+    import jax.numpy as jnp
+    m = get_cost_model()
+    x = jnp.ones((64, 64), jnp.float32)
+    w = m.predict_stage_wall(lambda a: a @ a, x)
+    assert w > 0.0
+
+
+def test_plan_shuffle_covers_partitions(isolated_model):
+    m = get_cost_model()
+    rng = np.random.default_rng(0)
+    n_bucket = np.concatenate([[5000], rng.integers(1, 80, 31)])
+    n_owned = (n_bucket * 0.7).astype(np.int64)
+    tile, plan, wall = m.plan_shuffle(n_owned, n_bucket)
+    assert tile in cm.TILE_CANDIDATES and wall > 0
+    ids = np.sort(np.concatenate([t[0] for t in plan]))
+    np.testing.assert_array_equal(ids, np.arange(32))
+
+
+def test_rows_basis_charges_per_tier_overhead(isolated_model):
+    # linear reducers: splitting the same rows over 3 tiers must predict
+    # slower than 1 tier (tiering buys no arithmetic back, costs dispatches)
+    f = get_cost_model().tier_cost_fn(basis="rows")
+    one = float(np.sum(f([16], [256], [256])))
+    three = float(np.sum(f([6, 5, 5], [256, 256, 256], [64, 128, 256])))
+    assert three > one
+
+
+# ---------------------------------------------------------------------------
+# plan_tiers: oracle parity + speed bound
+# ---------------------------------------------------------------------------
+
+def _plan_tiers_oracle(n_owned, n_bucket, tile, max_tiers=3,
+                       pad_partitions_to=1):
+    """The original O(U choose k) search, verbatim (PR 6-8 behavior)."""
+    n_owned = np.asarray(n_owned, np.int64)
+    n_bucket = np.asarray(n_bucket, np.int64)
+    caps = np.array([_round_up(int(c), tile) for c in n_bucket], np.int64)
+    uniq = np.unique(caps)
+
+    def cost_and_tiers(thresholds):
+        cost, tiers, lo = 0.0, [], -1
+        for th in thresholds:
+            sel = np.flatnonzero((caps > lo) & (caps <= th))
+            lo = th
+            if not len(sel):
+                continue
+            C1 = _round_up(int(n_owned[sel].max()), tile)
+            cost += float(_round_up(len(sel), pad_partitions_to)) * C1 * th
+            tiers.append((sel, C1, int(th)))
+        return cost, tiers
+
+    best = cost_and_tiers([int(uniq[-1])])
+    for k in range(2, min(max_tiers, len(uniq)) + 1):
+        for cut in itertools.combinations(range(len(uniq) - 1), k - 1):
+            cand = cost_and_tiers([int(uniq[i]) for i in cut]
+                                  + [int(uniq[-1])])
+            if cand[0] < best[0]:
+                best = cand
+    return best[1]
+
+
+@pytest.mark.parametrize("seed", range(40))
+def test_plan_tiers_matches_exhaustive_oracle(seed):
+    rng = np.random.default_rng(seed)
+    P = int(rng.integers(1, 40))
+    tile = int(rng.choice([1, 8, 64, 256]))
+    pad = int(rng.choice([1, 2, 4]))
+    kmax = int(rng.choice([1, 2, 3, 4]))
+    n_bucket = rng.integers(0, 2000, P)
+    n_owned = rng.integers(0, 2000, P)
+    got = plan_tiers(n_owned, n_bucket, tile, max_tiers=kmax,
+                     pad_partitions_to=pad)
+    want = _plan_tiers_oracle(n_owned, n_bucket, tile, max_tiers=kmax,
+                              pad_partitions_to=pad)
+    assert len(got) == len(want)
+    for (gi, gc1, gc2), (wi, wc1, wc2) in zip(got, want):
+        np.testing.assert_array_equal(gi, wi)
+        assert (gc1, gc2) == (wc1, wc2)
+
+
+def test_plan_tiers_500_unique_capacities_under_1s():
+    # tile=1 keeps every capacity distinct: U=500 was minutes with the old
+    # O(U^2) combinations search; the vectorized table + early exit must
+    # plan it in well under a second.
+    rng = np.random.default_rng(7)
+    n_bucket = rng.permutation(np.arange(1, 501))
+    n_owned = rng.integers(1, 500, 500)
+    t0 = time.perf_counter()
+    plan = plan_tiers(n_owned, n_bucket, 1, max_tiers=3)
+    dt = time.perf_counter() - t0
+    assert dt < 1.0, f"500-unique plan took {dt:.2f}s"
+    ids = np.sort(np.concatenate([t[0] for t in plan]))
+    np.testing.assert_array_equal(ids, np.arange(500))
+
+
+# ---------------------------------------------------------------------------
+# auto knobs: bit identity + recorded predictions
+# ---------------------------------------------------------------------------
+
+def test_auto_knobs_bit_identical_property(isolated_model):
+    for seed in range(4):
+        rng = np.random.default_rng(seed)
+        xyz = sky.make_catalog(int(rng.integers(200, 1200)), seed)
+        for engine in ("device", "host"):
+            hand = neighbor_search_job(0.05, tile=256)
+            auto = dataclasses.replace(hand, codec="auto", tile="auto")
+            r_hand = run_job(hand, xyz, engine=engine)
+            r_auto = run_job(auto, xyz, engine=engine)
+            assert r_auto.output == r_hand.output
+            assert r_auto.stats.codec in ("identity", "int16")
+            assert get_codec(r_auto.stats.codec).exact
+
+
+def test_auto_knobs_bit_identical_wordcount(isolated_model):
+    rng = np.random.default_rng(3)
+    toks = rng.integers(0, 3000, 20000)
+    hand = token_histogram_job(3000, n_partitions=8, tile=256)
+    auto = dataclasses.replace(hand, codec="auto", tile="auto")
+    for engine in ("device", "host"):
+        np.testing.assert_array_equal(
+            run_job(auto, toks, engine=engine).output,
+            run_job(hand, toks, engine=engine).output)
+
+
+def test_predicted_walls_recorded_and_error_observable(isolated_model):
+    xyz = sky.make_catalog(3000, 0)
+    r = run_job(neighbor_search_job(0.05), xyz, engine="device")
+    st = r.stats
+    assert st.predicted_shuffle_wall_s > 0
+    assert st.predicted_reduce_wall_s > 0
+    assert st.prediction_error > 0
+    assert "prediction_error" in st.to_dict()
+    # host engine never records device predictions -> error reads 0.0
+    st2 = run_job(neighbor_search_job(0.05), xyz, engine="host").stats
+    assert st2.prediction_error == 0.0
+
+
+@pytest.mark.skipif(not calibration_enabled(),
+                    reason="calibration needs >=2 CPUs and no opt-out")
+def test_calibrated_prediction_within_2x(isolated_model):
+    # acceptance: on a calibrated backend the predicted wall of the probe
+    # kernel itself must land within 2x of its measured wall
+    m = get_cost_model(calibrate=True)
+    assert m.profile.calibrated
+    for (tm, tn, b0, wall, flops, byts) in m.profile.probes[1:]:
+        pred = m.predict_wall(StageCost(flops=flops, hbm_bytes=byts))
+        assert 0.5 < pred / wall < 2.0, (tm, tn, b0, pred, wall)
+
+
+# ---------------------------------------------------------------------------
+# blocked chunk shape + sizing helpers
+# ---------------------------------------------------------------------------
+
+def test_blocked_chunk_override_is_exact(isolated_model):
+    from repro.kernels.zones_pairs import blocked
+    xyz = sky.make_catalog(4000, 1)
+    job = neighbor_search_job(0.03)
+    want = run_job(job, xyz, engine="device").output
+    blocked.set_chunk_shape(32, 32, 128)
+    try:
+        assert blocked.chunk_shape() == (32, 32, 128)
+        assert run_job(job, xyz, engine="device").output == want
+    finally:
+        blocked.set_chunk_shape()
+    assert blocked.chunk_shape() == (blocked.TM, blocked.TN, blocked.B0)
+
+
+def test_auto_chunk_uncalibrated_keeps_default(isolated_model, monkeypatch):
+    from repro.kernels.zones_pairs import blocked
+    monkeypatch.setenv("REPRO_AUTO_CHUNK", "1")
+    assert blocked.chunk_shape() == (blocked.TM, blocked.TN, blocked.B0)
+
+
+def test_choose_blocked_chunk_prefers_measured_faster(isolated_model):
+    # synthetic probes where (128,128,512) amortizes dispatch best
+    probes = ((8, 8, 8, 1.0e-5, 1e3, 2e2),
+              (64, 64, 512, 3.0e-3, 4e8, 3e7),
+              (128, 128, 512, 4.0e-3, 16e8, 6e7))
+    m = CostModel(BackendProfile("fp", 1e10, 5e9, 1e-5, calibrated=True,
+                                 probes=probes))
+    assert m.choose_blocked_chunk() == (128, 128, 512)
+
+
+def test_choose_split_rows_bounds(isolated_model):
+    m = get_cost_model()
+    n = m.choose_split_rows(10_000_000, d=3)
+    assert 1 <= n <= 10_000_000
+    # byte cap binds for huge rows
+    assert m.choose_split_rows(10**9, bytes_per_row=1e6,
+                               max_split_bytes=128e6) <= 128
+    assert m.choose_split_rows(5) <= 5
+
+
+def test_choose_spill_ranges_bounds(isolated_model):
+    m = get_cost_model()
+    assert m.choose_spill_ranges(0.0, 1e9, P=64) == 1
+    assert m.choose_spill_ranges(1e12, 1e6, P=64) == 64          # capped at P
+    assert m.choose_spill_ranges(1e9, 1e9, P=256, max_ranges=8) <= 8
+    # needs ceil(est / (budget/2)) ranges
+    assert m.choose_spill_ranges(10e6, 4e6, P=256) == 5
+
+
+def test_spill_auto_ranges_wiring(isolated_model, tmp_path):
+    from repro.data import ArraySplits
+    from repro.mapreduce import SpillConfig, run_job_streaming
+    xyz = sky.make_catalog(6000, 4)
+    job = neighbor_search_job(0.03, tile=128)
+    want = run_job(job, xyz).output
+    res = run_job_streaming(
+        job, ArraySplits(xyz, n_splits=4),
+        spill=SpillConfig(budget_bytes=20_000, dir=str(tmp_path / "sp"),
+                          n_ranges="auto"))
+    assert res.output == want
+    assert res.stats.spill_ranges >= 1

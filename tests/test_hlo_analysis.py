@@ -78,3 +78,35 @@ def test_shape_bytes():
     assert _shape_bytes("bf16[10]") == 20
     assert _shape_bytes("(s32[], f32[4,4]{1,0})") == 4 + 64
     assert _shape_bytes("s8[100]") == 100
+
+
+# ---------------------------------------------------------------------------
+# census over real mapreduce stage callables (the cost model's inputs)
+# ---------------------------------------------------------------------------
+
+def test_census_counts_dot_flops_in_reduce_stage():
+    import jax
+    import jax.numpy as jnp
+    from repro.core.cost_model import stage_census
+
+    P, C1, C2, d = 4, 64, 96, 3
+    a = jax.ShapeDtypeStruct((P, C1, d), jnp.float32)
+    b = jax.ShapeDtypeStruct((P, C2, d), jnp.float32)
+    cen = stage_census(lambda x, y: jnp.einsum("pcd,ped->pce", x, y), a, b)
+    # one batched dot: 2 * P * C1 * C2 * d FLOPs, reads/writes nonzero bytes
+    assert cen.flops == 2.0 * P * C1 * C2 * d
+    assert cen.hbm_bytes > 0
+
+
+def test_census_blocked_chunk_elementwise_flops():
+    from repro.core.cost_model import _probe_args, stage_census
+    from repro.kernels.zones_pairs.blocked import _count_chunk
+
+    cen = stage_census(_count_chunk, *_probe_args(32, 32, 64))
+    # the pair kernel is an unrolled broadcast-multiply-add (the bit-parity
+    # contract forbids a real dot), so its work shows up as ELEMENTWISE
+    # flops inside fusions — zero dot flops is load-bearing, not a gap
+    assert cen.flops == 0.0
+    assert cen.ew_flops > 0.0
+    assert cen.hbm_bytes > 0.0
+    assert cen.summary()["ew_flops_per_device"] == cen.ew_flops
