@@ -738,6 +738,70 @@ def fig8_autoplan():
     return rows
 
 
+def fig9_energy():
+    """The paper's headline (Fig. 9): energy-efficiency ratios of the
+    low-power node vs the blade, split by workload class. The paper gets
+    7.7x for data-intensive jobs but only 3.4x for compute-intensive ones
+    — efficiency gains concentrate where the CPU mostly waits on I/O. We
+    recast host-engine (numpy oracle, Atom-class profile: the CPU pays
+    for every byte moved) vs device-engine (wire-dtype tiered shuffle,
+    blade-class profile: I/O is cheap, compute draws the power) under the
+    ``ModeledMeter``: per-stage-class watts x measured stage walls. The
+    ORDERING is the reproduced claim (data-intensive ratio > compute-
+    intensive ratio > 1), not the paper's absolute magnitudes — those
+    depend on 2009-era Atom vs Xeon silicon we are not modeling. The
+    balance-point row prices ``chips_to_balance`` in watts via the
+    power-aware roofline term (the paper's 'four Atom cores' answer,
+    asked as a wattage)."""
+    from repro.data import sky
+    from repro.mapreduce import (neighbor_search_job, neighbor_statistics_job,
+                                 run_job)
+    from repro.obs.energy import BLADE_DEVICE, ModeledMeter, use_meter
+
+    xyz = sky.make_catalog(20000, 0)
+    edges = np.linspace(0.005, 0.04, 8)
+    workloads = [
+        # search: one scalar per pair-block — shuffle/wire dominated
+        ("search", neighbor_search_job(0.02, codec="int16", tile=256)),
+        # stats: 8-bin histogram per block — reduce/compute dominated
+        ("stats", neighbor_statistics_job(edges / sky.ARCSEC, codec="int16",
+                                          tile=256)),
+    ]
+    rows, eff = [], {}
+    with use_meter(ModeledMeter()):
+        for wname, job in workloads:
+            for engine in ("host", "device"):
+                run_job(job, xyz, engine=engine)     # warmup (compile caches)
+                r = min((run_job(job, xyz, engine=engine) for _ in range(3)),
+                        key=lambda r: r.stats.wall_s)
+                st = r.stats
+                assert st.energy_j > 0.0, (wname, engine, st.energy_j)
+                eff[(wname, engine)] = st
+                rows.append((f"fig9_energy_{wname}_{engine}",
+                             st.wall_s * 1e6,
+                             f"energyJ={st.energy_j:.3f}"
+                             f"_rowsperJ={st.rows_per_joule:.0f}"
+                             f"_source={st.energy_source}"
+                             f"_dominant={st.dominant_stage}"))
+
+    def ratio(wname):
+        return (eff[(wname, "device")].rows_per_joule
+                / eff[(wname, "host")].rows_per_joule)
+
+    r_data, r_comp = ratio("search"), ratio("stats")
+    # the reproduced ordering: data-intensive efficiency gain exceeds the
+    # compute-intensive one, both > 1 (paper: 7.7x vs 3.4x)
+    assert r_data > r_comp > 1.0, (r_data, r_comp)
+    st = eff[("search", "device")]
+    terms = st.roofline(chip_w=BLADE_DEVICE.compute_w)
+    rows.append(("fig9_energy_ratios", 0.0,
+                 f"data_ratio={r_data:.2f}x_compute_ratio={r_comp:.2f}x"
+                 f"_paper=7.7x/3.4x"
+                 f"_balance_chips={terms.chips_to_balance():.3f}"
+                 f"_balance_w={terms.balance_watts():.1f}"))
+    return rows
+
+
 ALL = [fig1_direct_io, table2_network, fig2_pipeline, fig3_improvements,
        fig4_streaming, fig5_service, fig6_speculation, fig7_spill,
-       fig8_autoplan, table3_apps, table4_amdahl]
+       fig8_autoplan, fig9_energy, table3_apps, table4_amdahl]

@@ -33,17 +33,21 @@ class RooflineTerms:
     coll_bytes_cross: float
     chips: int
     model_flops: float = 0.0
+    chip_w: float = 0.0          # watts per chip (0 = no power accounting)
 
     @classmethod
     def from_stage_bytes(cls, *, flops: float, hbm_bytes: float,
                          wire_bytes: float, chips: int = 1,
-                         model_flops: float = 0.0) -> "RooflineTerms":
+                         model_flops: float = 0.0,
+                         chip_w: float = 0.0) -> "RooflineTerms":
         """Build terms from per-stage MapReduce accounting (StageStats):
         reduce FLOPs -> compute, map+reduce bytes -> memory, shuffle wire
-        bytes -> the intra-pod collective term (the paper's network I/O)."""
+        bytes -> the intra-pod collective term (the paper's network I/O).
+        ``chip_w`` carries per-chip watts into the balance estimate."""
         return cls(flops=flops, hbm_bytes=hbm_bytes,
                    coll_bytes_intra=wire_bytes, coll_bytes_cross=0.0,
-                   chips=chips, model_flops=model_flops or flops)
+                   chips=chips, model_flops=model_flops or flops,
+                   chip_w=chip_w)
 
     @property
     def t_compute(self) -> float:
@@ -114,6 +118,18 @@ class RooflineTerms:
             return float(self.chips)
         return self.chips * self.t_compute / t_io
 
+    @property
+    def power_w(self) -> float:
+        """Provisioned draw of the configured mesh (chips x watts/chip)."""
+        return self.chips * self.chip_w
+
+    def balance_watts(self) -> float:
+        """The balance point priced in watts: the paper answers 'how many
+        cores make a balanced node' (four Atom cores); with a power term
+        the same estimate reads as the compute draw this workload's I/O
+        pattern can keep fed. 0.0 when no ``chip_w`` was supplied."""
+        return self.chips_to_balance() * self.chip_w
+
     def to_dict(self) -> dict:
         d = {
             "flops": self.flops, "hbm_bytes": self.hbm_bytes,
@@ -128,6 +144,8 @@ class RooflineTerms:
         }
         d.update(self.amdahl_numbers())
         d["chips_to_balance"] = self.chips_to_balance()
+        d["chip_w"] = self.chip_w
+        d["balance_watts"] = self.balance_watts()
         return d
 
 

@@ -79,6 +79,8 @@ from repro.mapreduce.job import (JobResult, MappedSplit,  # noqa: F401
                                  validate_batch)
 from repro.mapreduce.spill import (SpillConfig, SpillStore, mapped_to_host,
                                    mapped_wire_nbytes, plan_bounds)
+from repro.obs.energy import get_meter
+from repro.obs.trace import get_tracer
 
 
 # ---------------------------------------------------------------------------
@@ -259,7 +261,8 @@ def _streamed_reduce(store: SpillStore, meter: _ResidentMeter, jobs, P: int,
     as its reduce returns, so peak residency is O(one range)."""
 
     def produce(z):
-        rec = store.read_range(z)
+        with get_tracer().span("spill-read", cat="io", range=z):
+            rec = store.read_range(z)
         nb = _range_record_nbytes(rec)
         meter.add(nb)
         m = MappedSplit(
@@ -573,11 +576,20 @@ class LanePool:
                 t0 = self._clock()
                 requeue = None
                 dead = False
+                tr = get_tracer()
                 try:
-                    if self.chaos is not None:
-                        self.chaos.on_task_start(lane.id, task.key,
-                                                 task.attempt, cancel)
-                    out = task.fn(cancel)
+                    # the lane-exec span closes in its finally even when the
+                    # task dies mid-stage (chaos kill, cancel, transient
+                    # fault) — the exception then continues into the ladder
+                    # below with every opened span closed
+                    with tr.ids(lane=lane.id, split=task.key), \
+                         tr.span("lane-exec", cat="lane", lane=lane.id,
+                                 split=task.key, attempt=task.attempt,
+                                 clone=task.clone):
+                        if self.chaos is not None:
+                            self.chaos.on_task_start(lane.id, task.key,
+                                                     task.attempt, cancel)
+                        out = task.fn(cancel)
                 except (LaneCancelled, CancelledFetch):
                     with self._lock:
                         self.cancelled += 1
@@ -616,7 +628,9 @@ class LanePool:
                     return
                 if requeue is not None:
                     # bounded exponential backoff, interruptible on shutdown
-                    self._stop.wait(self.backoff_s * (2 ** task.attempt))
+                    with tr.span("retry", cat="lane", lane=lane.id,
+                                 split=task.key, attempt=requeue.attempt):
+                        self._stop.wait(self.backoff_s * (2 ** task.attempt))
                     with self._lock:
                         self.retries += 1
                         self._submit_locked(requeue)
@@ -632,6 +646,8 @@ class LanePool:
             self.meta[task.key] = meta
             if task.clone:
                 self.clone_wins += 1
+                get_tracer().instant("clone-win", cat="lane",
+                                     split=task.key, lane=lane.id)
             for rec in self._by_key.get(task.key, ()):
                 if rec["task"] is not task:
                     rec["cancel"].set()         # losers: unwind between stages
@@ -718,6 +734,7 @@ class LanePool:
             if verdict["action"] == "speculate" and make_task_fn is not None:
                 k = verdict["split"]
                 self.speculated += 1
+                get_tracer().instant("clone-race", cat="lane", split=k)
                 self._submit_locked(_LaneTask(k, make_task_fn(k), clone=True))
 
     # -- shutdown ------------------------------------------------------------
@@ -854,14 +871,24 @@ def run_jobs_streaming(jobs, source: SplitSource, *, mesh=None,
                        codec=codec.name, n_splits=K,
                        combiner=comb.name if comb else "")
     policy = _resolve_policy(speculate)
+    tr = get_tracer()
+    meter = get_meter()
+    mtok = meter.begin()
     if (n_lanes > 1 or policy is not None or chaos is not None
             or max_retries > 0 or deadline_s is not None):
-        return _run_jobs_lanes(
+        t_job0 = time.perf_counter()
+        out = _run_jobs_lanes(
             jobs, source, mesh=mesh, device=device, codec=codec, part=part,
             comb=comb, K=K, stats=stats, straggler_monitor=straggler_monitor,
             n_lanes=max(1, int(n_lanes)), policy=policy, chaos=chaos,
             max_retries=max_retries, retry_backoff_s=retry_backoff_s,
             deadline_s=deadline_s, spill_cfg=spill_cfg)
+        if tr.enabled:
+            tr.record("job", t_job0, time.perf_counter(), cat="job",
+                      job=stats.job, mode="lanes")
+        meter.attribute(mtok, stats)
+        return out
+    t_job0 = time.perf_counter()
 
     def fetch(k):
         # -> (items, raw_rows, raw_bytes): the RAW split size is carried
@@ -876,9 +903,10 @@ def run_jobs_streaming(jobs, source: SplitSource, *, mesh=None,
     def fetch_to_device(k):
         # runs on the prefetch thread: host I/O, precombine, AND the
         # host->device transfer all overlap the main thread's compute
-        s, raw_rows, raw_bytes = fetch(k)
-        return (jax.device_put(np.ascontiguousarray(
-            np.asarray(s, np.float32))), raw_rows, raw_bytes)
+        with tr.span("fetch", cat="io", split=k):
+            s, raw_rows, raw_bytes = fetch(k)
+            return (jax.device_put(np.ascontiguousarray(
+                np.asarray(s, np.float32))), raw_rows, raw_bytes)
 
     def synchronous():
         for k in range(K):
@@ -904,6 +932,12 @@ def run_jobs_streaming(jobs, source: SplitSource, *, mesh=None,
         raw_bytes_total += raw_bytes
         stats.fetch_wall_s += wait_s
         stats.overlap_hidden_s += max(prep_s - wait_s, 0.0)
+        if tr.enabled and wait_s > 0:
+            # the wait just ended: record the exposed fetch stall span
+            # retroactively (the hidden part already traced as "fetch" on
+            # the prefetch thread)
+            t_now = tr.now()
+            tr.record("fetch-wait", t_now - wait_s, t_now, cat="io", split=k)
         if P is None:
             P = int(part.n_partitions(items_k))
         rec = {"split": k, "n_items": raw_rows, "fetch_wait_s": wait_s,
@@ -924,9 +958,10 @@ def run_jobs_streaming(jobs, source: SplitSource, *, mesh=None,
                 totals, sd, sp, sr = shuffle_reduce_device(jobs, m, P, stats,
                                                            mesh)
                 agg.add(sd, sp, sr)
-                t0 = time.perf_counter()
-                acc = comb.combine(acc, totals)
-                stats.combine_wall_s += time.perf_counter() - t0
+                with tr.span("combine", cat="stage", split=k):
+                    t0 = time.perf_counter()
+                    acc = comb.combine(acc, totals)
+                    stats.combine_wall_s += time.perf_counter() - t0
         else:
             items_h = np.asarray(items_k)
             if comb is None:
@@ -935,9 +970,10 @@ def run_jobs_streaming(jobs, source: SplitSource, *, mesh=None,
                 totals, sd, sp, sr = host_shuffle_reduce(jobs, items_h,
                                                          stats, mesh)
                 agg.add(sd, sp, sr)
-                t0 = time.perf_counter()
-                acc = comb.combine(acc, totals)
-                stats.combine_wall_s += time.perf_counter() - t0
+                with tr.span("combine", cat="stage", split=k):
+                    t0 = time.perf_counter()
+                    acc = comb.combine(acc, totals)
+                    stats.combine_wall_s += time.perf_counter() - t0
         rec["map_s"] = stats.map_wall_s - m0
         rec["shuffle_s"] = stats.shuffle_wall_s - s0
         rec["reduce_s"] = stats.reduce_wall_s - r0
@@ -958,10 +994,12 @@ def run_jobs_streaming(jobs, source: SplitSource, *, mesh=None,
             produce = fetch_to_device if device else fetch
             with Prefetcher(produce, depth=prefetch, n=K) as pf:
                 while (got := pf.get()) is not None:
-                    consume(*got)
+                    with tr.ids(split=got[0]):
+                        consume(*got)
         else:
             for got in synchronous():
-                consume(*got)
+                with tr.ids(split=got[0]):
+                    consume(*got)
         assert len(recs) == K, (len(recs), K)
 
         if comb is None:
@@ -995,6 +1033,10 @@ def run_jobs_streaming(jobs, source: SplitSource, *, mesh=None,
     stats.n_items = raw_items_total
     stats.map_bytes = raw_bytes_total
     stats.splits = tuple(recs)
+    if tr.enabled:
+        tr.record("job", t_job0, time.perf_counter(), cat="job",
+                  job=stats.job, mode="stream")
+    meter.attribute(mtok, stats)
     return [JobResult(j.reducer.finalize(t, summary), stats)
             for j, t in zip(jobs, totals)]
 
@@ -1077,10 +1119,16 @@ def _run_jobs_lanes(jobs, source, *, mesh, device, codec, part, comb, K,
 
     def make_task(k):
         def fn(cancel):
+            tr = get_tracer()
             local = StageStats()
             t0 = time.perf_counter()
             s, raw_rows, raw_bytes = fetch(k, cancel)
-            local.fetch_wall_s = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            local.fetch_wall_s = t1 - t0
+            if tr.enabled:
+                # lane fetches are synchronous, so the whole fetch is an
+                # exposed wait from the lane's point of view
+                tr.record("fetch-wait", t0, t1, cat="io", split=k)
             if cancel.is_set():
                 raise LaneCancelled(k)
             P_k = int(part.n_partitions(s))
@@ -1143,9 +1191,10 @@ def _run_jobs_lanes(jobs, source, *, mesh, device, codec, part, comb, K,
         if kind == "acc":
             totals, sd, sp, sr = rest
             agg.add(sd, sp, sr)
-            t0 = time.perf_counter()
-            state["acc"] = comb.combine(state["acc"], totals)
-            stats.combine_wall_s += time.perf_counter() - t0
+            with get_tracer().span("combine", cat="stage", split=k):
+                t0 = time.perf_counter()
+                state["acc"] = comb.combine(state["acc"], totals)
+                stats.combine_wall_s += time.perf_counter() - t0
         elif kind == "spilled":
             # lane-safe commit: the winning attempt's staged segments
             # finalize-rename here, serialized under the pool lock; a

@@ -91,6 +91,17 @@ class StageStats:
     predicted_shuffle_wall_s: float = 0.0
     predicted_reduce_wall_s: float = 0.0
     auto_tile: int = 0                 # 0 = tile was not auto-planned
+    # energy accounting (obs/energy.py): joules per stage, measured (RAPL/
+    # NVML counter deltas spread by active-wall share) or modeled
+    # (PowerProfile watts x stage wall). All zero when metering is off.
+    energy_j: float = 0.0              # total joules attributed to this run
+    map_energy_j: float = 0.0
+    shuffle_energy_j: float = 0.0
+    reduce_energy_j: float = 0.0
+    fetch_energy_j: float = 0.0
+    combine_energy_j: float = 0.0
+    spill_energy_j: float = 0.0
+    energy_source: str = ""            # "" off | "modeled:<profile>" | "rapl" | "nvml"
 
     # per-stage accumulator fields that add across per-split / per-lane
     # partial StageStats when lanes merge their local stats into the shared one
@@ -100,7 +111,10 @@ class StageStats:
                      "fetch_wall_s", "combine_wall_s", "overlap_hidden_s",
                      "spill_bytes", "spill_wall_s", "spilled_splits",
                      "speculated", "clone_wins", "retries",
-                     "predicted_shuffle_wall_s", "predicted_reduce_wall_s")
+                     "predicted_shuffle_wall_s", "predicted_reduce_wall_s",
+                     "energy_j", "map_energy_j", "shuffle_energy_j",
+                     "reduce_energy_j", "fetch_energy_j", "combine_energy_j",
+                     "spill_energy_j")
 
     def merge_from(self, other: "StageStats") -> "StageStats":
         """Fold a per-split/per-lane partial ``StageStats`` into this one:
@@ -111,7 +125,7 @@ class StageStats:
         for f in self._ACCUM_FIELDS:
             setattr(self, f, getattr(self, f) + getattr(other, f))
         for f in ("n_partitions", "n_shards", "shuffle_index_impl",
-                  "auto_tile"):
+                  "auto_tile", "energy_source"):
             mine = getattr(self, f)
             if mine in (0, 1, ""):
                 setattr(self, f, getattr(other, f))
@@ -149,6 +163,13 @@ class StageStats:
         return self.overlap_hidden_s / total if total > 0 else 0.0
 
     @property
+    def rows_per_joule(self) -> float:
+        """Work per joule — the paper's energy-efficiency unit (its 7.7x /
+        3.4x ratios are this number, blade over cluster). 0.0 when no
+        metering was active."""
+        return self.n_items / self.energy_j if self.energy_j > 0 else 0.0
+
+    @property
     def compression_ratio(self) -> float:
         """Raw/wire shuffle bytes (1.0 = identity, 2.0 = int16, ~4 = int8)."""
         if not self.shuffle_wire_bytes:
@@ -163,16 +184,18 @@ class StageStats:
                  "combine": self.combine_wall_s, "spill": self.spill_wall_s}
         return max(times, key=times.get)
 
-    def roofline(self, chips: int = 1) -> RooflineTerms:
+    def roofline(self, chips: int = 1, chip_w: float = 0.0) -> RooflineTerms:
         """Recast as three-resource roofline terms (Amdahl-number analysis).
         Spilled bytes cross the memory boundary twice (write + read back),
-        the paper's disk term folded into the HBM analogue."""
+        the paper's disk term folded into the HBM analogue. Pass ``chip_w``
+        (watts per chip, e.g. a ``PowerProfile.compute_w``) to get the
+        balance point in watts as well as chips."""
         return RooflineTerms.from_stage_bytes(
             flops=self.reduce_flops,
             hbm_bytes=self.map_bytes + self.reduce_bytes
             + 2 * self.spill_bytes,
             wire_bytes=self.shuffle_wire_bytes,
-            chips=chips)
+            chips=chips, chip_w=chip_w)
 
     def to_dict(self, chips: int = 1) -> dict:
         d = {f.name: getattr(self, f.name)
@@ -180,7 +203,8 @@ class StageStats:
         d.update(wall_s=self.wall_s, dominant_stage=self.dominant_stage,
                  compression_ratio=self.compression_ratio,
                  overlap_fraction=self.overlap_fraction,
-                 prediction_error=self.prediction_error)
+                 prediction_error=self.prediction_error,
+                 rows_per_joule=self.rows_per_joule)
         d["amdahl"] = self.roofline(chips).to_dict()
         return d
 
@@ -216,15 +240,22 @@ def latency_summary(requests) -> dict:
     consolidation question, asked of tails instead of means)."""
     reqs = list(requests)
     if not reqs:
-        return {"n": 0, "qps": 0.0, "p50_ms": 0.0, "p99_ms": 0.0,
-                "wait_p50_ms": 0.0, "wait_p99_ms": 0.0, "mean_batch": 0.0}
+        return {"n": 0, "span_s": 0.0, "qps": 0.0, "p50_ms": 0.0,
+                "p99_ms": 0.0, "wait_p50_ms": 0.0, "wait_p99_ms": 0.0,
+                "mean_batch": 0.0}
     lat = np.array([r.latency_s for r in reqs])
     wait = np.array([r.queue_wait_s for r in reqs])
     t0 = min(r.t_submit_s for r in reqs)
-    span = max(max(r.t_submit_s + r.latency_s for r in reqs) - t0, 1e-9)
+    span = max(r.t_submit_s + r.latency_s for r in reqs) - t0
+    # A single request (or simultaneous zero-latency ones) spans ~0 s;
+    # dividing by a floored span would report ~1e9 qps. A degenerate span
+    # carries no throughput information, so report qps = 0 and let the
+    # caller read span_s.
+    qps = len(reqs) / span if span > 1e-9 else 0.0
     return {
         "n": len(reqs),
-        "qps": len(reqs) / span,
+        "span_s": float(span),
+        "qps": qps,
         "p50_ms": float(np.percentile(lat, 50)) * 1e3,
         "p99_ms": float(np.percentile(lat, 99)) * 1e3,
         "wait_p50_ms": float(np.percentile(wait, 50)) * 1e3,

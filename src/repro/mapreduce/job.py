@@ -53,6 +53,8 @@ import numpy as np
 from repro.core.compat import shard_map as _shard_map_compat
 from repro.mapreduce.codecs import ShuffleCodec, get_codec
 from repro.mapreduce.instrumentation import StageStats
+from repro.obs.energy import get_meter
+from repro.obs.trace import get_tracer
 
 
 def _round_up(x: int, m: int) -> int:
@@ -368,6 +370,7 @@ def shuffle_stage(items, partitioner: Partitioner, codec="identity", *,
         items = items[:, None]
     stats = stats if stats is not None else StageStats()
 
+    tr = get_tracer()
     t0 = time.perf_counter()
     P = int(partitioner.n_partitions(items))
     keys = np.asarray(partitioner.assign(items))
@@ -375,8 +378,11 @@ def shuffle_stage(items, partitioner: Partitioner, codec="identity", *,
     bucket_idx = [[idx] for idx in owned_idx]
     for dest, idx in partitioner.replicas(items, keys, P):
         bucket_idx[dest].append(np.asarray(idx))
-    stats.map_wall_s = time.perf_counter() - t0
+    t1 = time.perf_counter()
+    stats.map_wall_s = t1 - t0
     stats.map_bytes = items.nbytes
+    if tr.enabled:
+        tr.record("map", t0, t1, cat="stage", engine="host")
 
     t0 = time.perf_counter()
     decoded = codec.roundtrip(items).astype(np.float32)
@@ -396,7 +402,10 @@ def shuffle_stage(items, partitioner: Partitioner, codec="identity", *,
         n_bucket=np.array([len(b) for b in bucket_lists], np.int32),
     )
     n_shuffled = int(sd.n_bucket.sum())
-    stats.shuffle_wall_s = time.perf_counter() - t0
+    t1 = time.perf_counter()
+    stats.shuffle_wall_s = t1 - t0
+    if tr.enabled:
+        tr.record("shuffle", t0, t1, cat="stage", engine="host")
     stats.shuffle_wire_bytes = codec.nbytes(n_shuffled * d)
     stats.shuffle_raw_bytes = 4 * n_shuffled * d
     stats.n_items = len(items)
@@ -762,20 +771,22 @@ def map_split_device(partitioner: Partitioner, codec: ShuffleCodec, items,
     jax ops, payload encoded straight to the codec's wire dtype. Pure
     dispatch — nothing here blocks, so a caller can map split k while split
     k-1 still reduces."""
-    if not isinstance(items, jax.Array):
-        items = np.asarray(items)
-    if items.ndim == 1:
-        items = items[:, None]
-    items_dev = jnp.asarray(items, jnp.float32)
-    keys = partitioner.assign_device(items_dev)
-    dest, src, valid = partitioner.bucket_entries_device(items_dev, keys, P)
-    dest_eff = jnp.where(valid, dest, P).astype(jnp.int32)
-    src = jnp.asarray(src, jnp.int32)
-    payloads = codec.encode_device(items_dev)
-    skey = partitioner.sort_key_device(items_dev)
-    return MappedSplit(payloads, keys, dest_eff, src, skey,
-                       n_rows=int(items.shape[0]), d=int(items.shape[1]),
-                       nbytes_in=int(items.nbytes))
+    with get_tracer().span("map", cat="stage", engine="device"):
+        if not isinstance(items, jax.Array):
+            items = np.asarray(items)
+        if items.ndim == 1:
+            items = items[:, None]
+        items_dev = jnp.asarray(items, jnp.float32)
+        keys = partitioner.assign_device(items_dev)
+        dest, src, valid = partitioner.bucket_entries_device(items_dev,
+                                                            keys, P)
+        dest_eff = jnp.where(valid, dest, P).astype(jnp.int32)
+        src = jnp.asarray(src, jnp.int32)
+        payloads = codec.encode_device(items_dev)
+        skey = partitioner.sort_key_device(items_dev)
+        return MappedSplit(payloads, keys, dest_eff, src, skey,
+                           n_rows=int(items.shape[0]), d=int(items.shape[1]),
+                           nbytes_in=int(items.nbytes))
 
 
 def concat_mapped(splits: "list[MappedSplit]") -> MappedSplit:
@@ -872,7 +883,12 @@ class ResidentCatalog:
             totals = outs if totals is None else tuple(
                 jax.tree.map(jnp.add, a, b) for a, b in zip(totals, outs))
         totals = jax.block_until_ready(totals)
-        stats.reduce_wall_s += time.perf_counter() - t0
+        t1 = time.perf_counter()
+        stats.reduce_wall_s += t1 - t0
+        tr = get_tracer()
+        if tr.enabled:
+            tr.record("reduce", t0, t1, cat="stage", engine="device",
+                      tiers=len(self.sd.tiers))
         stats.reduce_bytes += self.nbytes
         flops = float(sum(r.flops(self.sd) for r in reducers))
         stats.reduce_flops += flops
@@ -905,7 +921,10 @@ class ResidentCatalog:
         stats.shard_padded_ratio = tuple(
             float(p / max(r, 1.0))
             for p, r in zip(self.shard_pad, self.shard_real))
+        meter = get_meter()
+        mtok = meter.begin()
         totals = self.reduce_totals(tuple(j.reducer for j in jobs), stats)
+        meter.attribute(mtok, stats)
         return [JobResult(j.reducer.finalize(t, self.sd), stats)
                 for j, t in zip(jobs, totals)]
 
@@ -990,7 +1009,11 @@ def _shuffle_mapped(partitioner: Partitioner, codec: ShuffleCodec, tile,
     sd = DeviceShuffledData(tiers, n_owned, n_bucket)
     n_shuffled = int(n_bucket.sum())
     wire = n_shuffled * codec.device_bytes_per_item(d)
-    stats.shuffle_wall_s += time.perf_counter() - t0
+    t1 = time.perf_counter()
+    stats.shuffle_wall_s += t1 - t0
+    tr = get_tracer()
+    if tr.enabled:
+        tr.record("shuffle", t0, t1, cat="stage", engine="device")
     stats.shuffle_wire_bytes += wire
     stats.shuffle_raw_bytes += 4 * n_shuffled * d
     # predicted shuffle wall: the sort/scatter is byte-bound — payload rows
@@ -1026,12 +1049,15 @@ def shuffle_once(partitioner: Partitioner, items, *, codec="identity",
         stats = StageStats(job="shuffle_once")
     P = int(partitioner.n_partitions(
         items if isinstance(items, jax.Array) else np.asarray(items)))
+    meter = get_meter()
+    mtok = meter.begin()
     t0 = time.perf_counter()
     m = map_split_device(partitioner, codec, items, P)
     stats.map_wall_s += time.perf_counter() - t0
     stats.map_bytes += m.nbytes_in
     cat = _shuffle_mapped(partitioner, codec, tile, pad_value, m, P, stats,
                           mesh)
+    meter.attribute(mtok, stats)
     cat.load_stats = stats
     return cat
 
@@ -1169,7 +1195,11 @@ def host_shuffle_reduce(jobs, items, stats: StageStats, mesh=None):
     t0 = time.perf_counter()
     totals = jax.block_until_ready(
         reduce_stage([j.reducer for j in jobs], sd, mesh))
-    stats.reduce_wall_s += time.perf_counter() - t0
+    t1 = time.perf_counter()
+    stats.reduce_wall_s += t1 - t0
+    tr = get_tracer()
+    if tr.enabled:
+        tr.record("reduce", t0, t1, cat="stage", engine="host")
     stats.reduce_bytes += sd.owned.nbytes + sd.bucket.nbytes
     stats.reduce_flops += float(sum(j.reducer.flops(sd) for j in jobs))
     return totals, sd, np.full(D, pad_cells), np.asarray(cells, np.float64)

@@ -60,6 +60,7 @@ import numpy as np
 
 from repro.data.pipeline import Prefetcher
 from repro.mapreduce.job import MappedSplit
+from repro.obs.trace import get_tracer
 
 _MAGIC = b"SPL1"
 
@@ -229,12 +230,16 @@ class SpillStore:
         assert recs, "stage_chunk needs at least one mapped split"
         bounds = self.bounds
         paths, nbytes = [], 0
-        for z in range(len(bounds) - 1):
-            lo, hi = int(bounds[z]), int(bounds[z + 1])
-            path = self._seg_path(0, z) + f".staged-{tag}"
-            nbytes += _write_segment(path, recs, lo, hi,
-                                     write_fault=self.write_fault)
-            paths.append((z, path))
+        # one spill-write span per staged chunk, on whichever thread writes
+        # (a lane staging its own split, or the store's async writer)
+        with get_tracer().span("spill-write", cat="io", tag=tag,
+                               n_splits=len(recs)):
+            for z in range(len(bounds) - 1):
+                lo, hi = int(bounds[z]), int(bounds[z + 1])
+                path = self._seg_path(0, z) + f".staged-{tag}"
+                nbytes += _write_segment(path, recs, lo, hi,
+                                         write_fault=self.write_fault)
+                paths.append((z, path))
         return SpilledChunk(tag=tag, paths=paths, nbytes=nbytes,
                             n_splits=len(recs))
 

@@ -47,6 +47,8 @@ from collections import deque
 from repro.mapreduce.codecs import get_codec
 from repro.mapreduce.instrumentation import RequestStats, latency_summary
 from repro.mapreduce.job import (MapReduceJob, ResidentCatalog, shuffle_once)
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import get_tracer
 
 
 def _job_key(job: MapReduceJob) -> tuple:
@@ -104,7 +106,7 @@ class MRQueryService:
     def __init__(self, *, mesh=None, max_batch: int = 16,
                  max_wait_s: float = 0.002, straggler_monitor=None,
                  n_lanes: int = 1, lane_chaos=None,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter, metrics: MetricsRegistry = None):
         self.mesh = mesh
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_s)
@@ -112,6 +114,11 @@ class MRQueryService:
         self.n_lanes = int(n_lanes)
         self.lane_chaos = lane_chaos
         self.clock = clock
+        # live service metrics (obs/metrics.py): per-instance by default so
+        # two services don't mix counters; pass a shared registry to scrape
+        # several services off one page
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._t_first_submit: float | None = None
         self.catalogs: dict[str, ResidentCatalog] = {}
         self.request_stats: list[RequestStats] = []
         self.batches: list[dict] = []       # per-batch records (size, wall, ...)
@@ -165,6 +172,10 @@ class MRQueryService:
             req = MRRequest(self._rid, job, catalog, self.clock())
             self._rid += 1
             self._queue.append(req)
+            if self._t_first_submit is None:
+                self._t_first_submit = req.t_submit
+            self.metrics.counter("mr_requests").inc()
+            self.metrics.gauge("mr_queue_depth").set(len(self._queue))
             self._cond.notify()
         return req
 
@@ -207,7 +218,9 @@ class MRQueryService:
         to the actually-failing job see its error; batch-mates are served.
         Bookkeeping appends under a lock so lane-concurrent batches can't
         interleave records."""
+        tr = get_tracer()
         t_admit = self.clock()
+        t_span0 = time.perf_counter()
         by_cat: dict[str, list[MRRequest]] = {}
         for r in batch:
             by_cat.setdefault(r.catalog, []).append(r)
@@ -246,6 +259,7 @@ class MRQueryService:
                     r.error = err
         t_done = self.clock()
         wall = t_done - t_admit
+        m = self.metrics
         with self._blk:
             bidx = len(self.batches)
             self.batches.append({"batch": bidx, "size": len(batch),
@@ -260,6 +274,22 @@ class MRQueryService:
                     queue_wait_s=t_admit - r.t_submit,
                     batch_wall_s=wall, latency_s=t_done - r.t_submit)
                 self.request_stats.append(r.stats)
+                m.histogram("mr_latency_ms").observe(r.stats.latency_s * 1e3)
+                m.histogram("mr_queue_wait_ms").observe(
+                    r.stats.queue_wait_s * 1e3)
+            m.counter("mr_batches").inc()
+            m.counter("mr_requests_served").inc(len(batch))
+            n_served = len(self.request_stats)
+            t_first = self._t_first_submit
+        if tr.enabled:
+            tr.record("service-batch", t_span0, time.perf_counter(),
+                      cat="service", batch=bidx, size=len(batch),
+                      n_unique=n_unique,
+                      rids=[r.rid for r in batch[:32]])
+        span = (t_done - t_first) if t_first is not None else 0.0
+        if span > 1e-9:
+            m.gauge("mr_qps").set(n_served / span)
+        m.gauge("mr_queue_depth").set(self.pending)
         for r in batch:
             r._done.set()
 
@@ -289,8 +319,15 @@ class MRQueryService:
         behind one stream); a lane death shrinks the pool and requeues the
         batch onto the survivors instead of killing the service."""
         while True:
+            t0 = time.perf_counter()
             batch = self._admit()
             if batch:
+                tr = get_tracer()
+                if tr.enabled:
+                    # covers waiting for the first request plus the
+                    # admission window it opened
+                    tr.record("service-admit", t0, time.perf_counter(),
+                              cat="service", size=len(batch))
                 if self._pool is not None:
                     key, self._nbatch = self._nbatch, self._nbatch + 1
                     self._pool.submit(
